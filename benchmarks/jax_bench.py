@@ -1,0 +1,94 @@
+"""TPU-adaptation benchmarks: vectorized search, kernels, mqr-KV serving."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bulk, datasets, flat, kvindex, mqrtree
+from repro.kernels import ops
+
+
+def _timeit(fn, *args, iters=5):
+    fn(*args)  # warm / compile
+    t0 = time.time()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.time() - t0) / iters
+
+
+def bench_flat_search():
+    data = datasets.uniform_squares(2000, seed=1)
+    tree = mqrtree.build(data)
+    ft = flat.flatten(tree)
+    qs = jnp.asarray(datasets.region_queries(data, 32, seed=2), jnp.float32)
+    t_host = _timeit(
+        lambda: [tree.region_search(np.asarray(q)) for q in qs], iters=2
+    )
+    t_jax = _timeit(lambda: flat.region_search_batch(ft, qs), iters=2)
+    return [
+        (t_host / 32, {"impl": "host-pointer", "queries": 32}),
+        (t_jax / 32, {"impl": "jax-levelized", "queries": 32}),
+    ]
+
+
+def bench_pyramid_build():
+    pts = jnp.asarray(datasets.uniform_points(4096, seed=3), jnp.float32)
+    f = jax.jit(lambda m: bulk.build_pyramid(m, levels=7).group_mbr)
+    return [(_timeit(f, pts), {"n": 4096, "levels": 7})]
+
+
+def bench_mbr_scan_kernel():
+    lo = jnp.asarray(np.random.default_rng(0).uniform(0, 1000, (8192, 2)), jnp.float32)
+    mbrs = jnp.concatenate([lo, lo + 10.0], axis=1)
+    qs = jnp.asarray(datasets.region_queries(np.asarray(mbrs), 8, seed=1), jnp.float32)
+    t_k = _timeit(lambda: ops.mbr_scan(mbrs, qs), iters=3)
+    t_r = _timeit(lambda: ops.mbr_scan_ref(mbrs, qs), iters=3)
+    return [
+        (t_k, {"impl": "pallas-interpret", "n": 8192}),
+        (t_r, {"impl": "jnp-ref", "n": 8192}),
+    ]
+
+
+def bench_mqr_sparse_vs_dense_decode():
+    """The paper's payoff on the KV cache: pruned vs full decode attention."""
+    key = jax.random.PRNGKey(0)
+    s, d, bs, k = 16384, 64, 128, 16
+    nb = s // bs
+    keys = jax.random.normal(key, (s, d))
+    vals = jax.random.normal(jax.random.fold_in(key, 1), (s, d))
+    probe = jax.random.normal(jax.random.fold_in(key, 2), (d,))
+    q = jax.random.normal(jax.random.fold_in(key, 3), (d,))
+
+    @jax.jit
+    def dense(q, keys, vals):
+        logits = keys @ q / jnp.sqrt(d)
+        return jax.nn.softmax(logits) @ vals
+
+    @jax.jit
+    def sparse(q, keys, vals):
+        idx = kvindex.build_kv_index(keys, probe, bs, 6)
+        ids = kvindex.select_blocks(idx, kvindex.query_region(q, probe, s), k)
+        kb = keys.reshape(nb, bs, d)[ids].reshape(-1, d)
+        vb = vals.reshape(nb, bs, d)[ids].reshape(-1, d)
+        logits = kb @ q / jnp.sqrt(d)
+        return jax.nn.softmax(logits) @ vb
+
+    t_d = _timeit(dense, q, keys, vals)
+    t_s = _timeit(sparse, q, keys, vals)
+    return [
+        (t_d, {"impl": "dense-decode", "kv": s}),
+        (t_s, {"impl": "mqr-sparse-decode", "kv": s, "blocks": f"{k}/{nb}"}),
+    ]
+
+
+JAX_BENCHES = {
+    "jax_flat_search": bench_flat_search,
+    "jax_pyramid_build": bench_pyramid_build,
+    "kernel_mbr_scan": bench_mbr_scan_kernel,
+    "mqr_sparse_vs_dense_decode": bench_mqr_sparse_vs_dense_decode,
+}

@@ -1,0 +1,27 @@
+"""Benchmark harness: one entry per paper table + TPU-adaptation benches.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks.tables import TABLES
+    from benchmarks.jax_bench import JAX_BENCHES
+
+    print("name,us_per_call,derived")
+    for name, fn in {**TABLES, **JAX_BENCHES}.items():
+        try:
+            for seconds, derived in fn():
+                print(f"{name},{seconds * 1e6:.1f},{json.dumps(derived, default=float)!r}")
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},-1,'ERROR: {e!r}'")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Paper-table benchmarks (Tables 1-8: insertion quality; 9-12: search).
+
+Scaled for single-CPU runtime: default object counts and tree counts are
+reduced; set REPRO_FULL=1 for counts closer to the paper's.
+Each function returns (name, seconds_per_build_or_query, derived_dict).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import datasets, metrics, mqrtree, rtree
+
+FULL = os.environ.get("REPRO_FULL", "0") == "1"
+SIZES = (500, 1000, 5000) if FULL else (500, 1000)
+N_TREES = 5 if FULL else 2
+
+
+def _build_compare(gen, sizes=SIZES, n_trees=N_TREES, seed0=0):
+    rows = []
+    for n in sizes:
+        for index, builder in (("mqr-tree", mqrtree.build), ("r-tree", rtree.build)):
+            ms, t_build = [], 0.0
+            for k in range(n_trees):
+                data = gen(n, seed=seed0 + 17 * k)
+                order = np.random.default_rng(k).permutation(n)
+                t0 = time.time()
+                t = builder(data[order])
+                t_build += time.time() - t0
+                ms.append(metrics.compute_metrics(t))
+            agg = {
+                "n": n, "index": index,
+                "nodes": np.mean([m.n_nodes for m in ms]),
+                "height": np.mean([m.height for m in ms]),
+                "avg_path": np.mean([m.avg_path for m in ms]),
+                "coverage": np.mean([m.coverage for m in ms]),
+                "overcoverage": np.mean([m.overcoverage for m in ms]),
+                "overlap": np.mean([m.overlap for m in ms]),
+                "util": np.mean([m.space_utilization for m in ms]),
+            }
+            rows.append((t_build / n_trees, agg))
+    return rows
+
+
+def _search_compare(gen, query_fn, sizes=SIZES, seed0=0):
+    rows = []
+    for n in sizes:
+        data = gen(n, seed=seed0)
+        qs = query_fn(data)
+        for index, builder in (("mqr-tree", mqrtree.build), ("r-tree", rtree.build)):
+            t = builder(data)
+            t0 = time.time()
+            found, visits = 0, 0
+            for q in qs:
+                f, v = t.region_search(q)
+                found += len(f)
+                visits += v
+            rows.append(
+                (
+                    (time.time() - t0) / len(qs),
+                    {
+                        "n": n, "index": index,
+                        "found": found / len(qs),
+                        "diskhits": visits / len(qs),
+                    },
+                )
+            )
+    return rows
+
+
+TABLES = {
+    "table1_uniform_objects": lambda: _build_compare(datasets.uniform_squares),
+    "table2_uniform_points": lambda: _build_compare(datasets.uniform_points),
+    "table3_exponential_objects": lambda: _build_compare(datasets.exponential_squares),
+    "table4_exponential_points": lambda: _build_compare(datasets.exponential_points),
+    "table5_roadlike_lines": lambda: _build_compare(
+        datasets.roadlike_lines, sizes=(2000, 5000) if FULL else (2000,)
+    ),
+    "table6_hv_lines": lambda: _build_compare(datasets.hv_lines),
+    "table7_sloped_lines": lambda: _build_compare(datasets.sloped_lines),
+    "table8_mixed_lines": lambda: _build_compare(datasets.mixed_lines),
+    "table9_search_uniform_objects": lambda: _search_compare(
+        datasets.uniform_squares,
+        lambda d: datasets.region_queries(d, 20, seed=3),
+        sizes=(2000,) if not FULL else (2000, 5000),
+    ),
+    "table10_search_uniform_points": lambda: _search_compare(
+        datasets.uniform_points,
+        lambda d: datasets.region_queries(d, 20, seed=4, target_found=1.0),
+        sizes=(2000,) if not FULL else (2000, 5000),
+    ),
+    "table11_search_exponential_objects": lambda: _search_compare(
+        datasets.exponential_squares,
+        lambda d: datasets.dense_region_queries(20, seed=5),
+    ),
+    "table12_search_exponential_points": lambda: _search_compare(
+        datasets.exponential_points,
+        lambda d: datasets.dense_region_queries(20, seed=6),
+    ),
+}

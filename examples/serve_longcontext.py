@@ -1,0 +1,38 @@
+"""End-to-end serving driver: batched requests with KV caches, then the
+mqr-KV sparse path (the paper's technique) on a longer context.
+
+  PYTHONPATH=src python examples/serve_longcontext.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import registry
+from repro.launch.serve import serve
+from repro.models import transformer as T
+
+
+def main():
+    # Batched requests, dense decode
+    out = serve(arch="llama32_1b", smoke=True, batch=4, prompt_len=48, gen=16)
+    print("dense decode outputs:", out[:, :8])
+
+    # Same model, mqr-KV sparse decode: the index prunes KV blocks per head
+    out_sparse = serve(arch="llama32_1b", smoke=True, batch=2, prompt_len=48,
+                       gen=16, mqr_sparse=True)
+    print("mqr-sparse outputs:  ", out_sparse[:, :8])
+
+    # show the pruning: topk out of nb blocks touched per step
+    cfg = registry.get_config("llama32_1b", smoke=True)
+    nb = 64 // cfg.mqr_block
+    print(f"\nmqr-KV touched {min(cfg.mqr_topk, nb)}/{nb} KV blocks per head "
+          f"per step (block={cfg.mqr_block} tokens, levels={cfg.mqr_levels}).")
+    print("At the long_500k production shape that is "
+          f"{64}/{524288 // 128} blocks — a ~64x HBM-read reduction, the "
+          "2026 analogue of the paper's disk-access table.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""The paper's own workload: spatial index construction + region search.
+
+Not an LM arch — exposes dataset/query parameters for the paper benchmarks
+(benchmarks/tables.py) and the mqr-KV defaults used by the LM integration.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialConfig:
+    dataset: str = "uniform_squares"
+    n_objects: int = 1000
+    n_trees: int = 5          # paper: 100 random orders; scaled for CPU
+    n_queries: int = 20
+    seed: int = 0
+    rtree_max_entries: int = 5
+
+
+def config() -> SpatialConfig:
+    return SpatialConfig()

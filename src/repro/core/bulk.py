@@ -1,0 +1,151 @@
+"""Bulk (bottom-up batched) mqr construction in pure JAX.
+
+The paper's insertion places an entry by the orientation of its MBR centroid
+relative to the node-MBR centroid, and Section 4 property 1 proves the result
+is *insertion-order independent* for distinct points: every centroid has
+exactly one possible location.  The canonical tree is therefore a recursive
+fixed point — each node's MBR is the bounding box of its member centroids'
+objects, and members are partitioned by the Fig. 2 quadrant rule about that
+box's centroid.  We compute that fixed point level-by-level as dense array
+ops (segment min/max + branch-free quadrant select), which is the
+TPU-idiomatic equivalent of incremental insertion (DESIGN.md §3.1).
+
+Output is a "group pyramid": for each level l, ``group_of[l, i]`` gives the
+dense group id of object i, and ``group_mbr[l, g]`` the group's MBR.  Group
+0 at level 0 is the root.  An object stops splitting once alone in its group
+(its group id simply stays fixed at deeper levels — harmless for search).
+The pyramid supports pointer-free region search: an object survives a query
+region iff every ancestor group MBR overlaps the region.
+
+Everything is static-shape and jit/vmap-compatible.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Quadrant codes (order irrelevant to correctness; matches mqrtree).
+_NE, _NW, _SW, _SE, _EQ = 0, 1, 2, 3, 4
+
+
+class GroupPyramid(NamedTuple):
+    group_of: jnp.ndarray   # (L, n) int32 — dense group id per object per level
+    group_mbr: jnp.ndarray  # (L, n, 4) float32 — MBR per dense group id
+    # (padded groups carry +inf/-inf sentinels that never overlap anything)
+    levels: int
+
+
+def quad_code(acx, acy, bcx, bcy):
+    """Branch-free Fig. 2 orientation table (vectorized).
+
+    a = entry centroid, b = node centroid.
+    """
+    gx = acx > bcx
+    lx = acx < bcx
+    gy = acy > bcy
+    ly = acy < bcy
+    ex = ~gx & ~lx
+    ey = ~gy & ~ly
+    ne = (gx & ~ly)             # Ax>Bx, Ay>=By
+    se = (gx & ly) | (ex & ly)  # Ax>Bx,Ay<By  or  Ax==Bx,Ay<By
+    nw = (lx & gy) | (ex & gy)  # Ax<Bx,Ay>By  or  Ax==Bx,Ay>By
+    sw = lx & ~gy               # Ax<Bx, Ay<=By
+    eq = ex & ey
+    return jnp.where(
+        eq,
+        _EQ,
+        jnp.where(ne, _NE, jnp.where(nw, _NW, jnp.where(sw, _SW, _SE))),
+    ).astype(jnp.int32)
+
+
+def _densify(keys: jnp.ndarray) -> jnp.ndarray:
+    """Map arbitrary int keys to dense ids in [0, n), order-preserving on
+    first occurrence after sort.  Static shapes throughout."""
+    n = keys.shape[0]
+    order = jnp.argsort(keys)
+    sk = keys[order]
+    new = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), (sk[1:] != sk[:-1]).astype(jnp.int32)]
+    )
+    dense_sorted = jnp.cumsum(new)
+    return jnp.zeros((n,), jnp.int32).at[order].set(dense_sorted)
+
+
+def _group_bounds(gid: jnp.ndarray, mbrs: jnp.ndarray, n: int):
+    """Per-group enclosing MBR via segment min/max. Returns (n, 4) table."""
+    lo_x = jax.ops.segment_min(mbrs[:, 0], gid, num_segments=n)
+    lo_y = jax.ops.segment_min(mbrs[:, 1], gid, num_segments=n)
+    hi_x = jax.ops.segment_max(mbrs[:, 2], gid, num_segments=n)
+    hi_y = jax.ops.segment_max(mbrs[:, 3], gid, num_segments=n)
+    return jnp.stack([lo_x, lo_y, hi_x, hi_y], axis=-1)
+
+
+def build_pyramid(mbrs: jnp.ndarray, levels: int) -> GroupPyramid:
+    """Build the mqr group pyramid for ``mbrs`` (n, 4) with ``levels`` levels.
+
+    Level 0 is the root (all objects in group 0).  Each deeper level applies
+    the Fig. 2 quadrant rule about the group-MBR centroid.  Groups that have
+    a single member stop subdividing (their id is frozen).
+    """
+    mbrs = jnp.asarray(mbrs, jnp.float32)
+    n = mbrs.shape[0]
+    cx = (mbrs[:, 0] + mbrs[:, 2]) * 0.5
+    cy = (mbrs[:, 1] + mbrs[:, 3]) * 0.5
+
+    gid = jnp.zeros((n,), jnp.int32)
+    group_of = [gid]
+    bounds = _group_bounds(gid, mbrs, n)
+    group_mbr = [bounds]
+
+    for _ in range(levels - 1):
+        counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), gid, num_segments=n)
+        multi = counts[gid] > 1
+        gb = bounds[gid]
+        gcx = (gb[:, 0] + gb[:, 2]) * 0.5
+        gcy = (gb[:, 1] + gb[:, 3]) * 0.5
+        quad = quad_code(cx, cy, gcx, gcy)
+        # singles keep subdividing trivially (they stay alone); key stays
+        # unique per object either way.
+        key = jnp.where(multi, gid * 5 + quad, gid * 5)
+        gid = _densify(key)
+        bounds = _group_bounds(gid, mbrs, n)
+        group_of.append(gid)
+        group_mbr.append(bounds)
+
+    return GroupPyramid(
+        group_of=jnp.stack(group_of),
+        group_mbr=jnp.stack(group_mbr),
+        levels=levels,
+    )
+
+
+def _overlaps(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return (
+        (a[..., 0] <= b[..., 2])
+        & (b[..., 0] <= a[..., 2])
+        & (a[..., 1] <= b[..., 3])
+        & (b[..., 1] <= a[..., 3])
+    )
+
+
+def pyramid_search(pyr: GroupPyramid, region: jnp.ndarray) -> jnp.ndarray:
+    """Pointer-free region search: object i survives iff the group MBR of
+    every ancestor level overlaps ``region`` (4,).  Returns (n,) bool."""
+    # (L, n): does object's level-l group overlap the region?
+    per_level = _overlaps(
+        jnp.take_along_axis(
+            pyr.group_mbr, pyr.group_of[:, :, None].repeat(4, axis=2), axis=1
+        ),
+        region[None, None, :],
+    )
+    return per_level.all(axis=0)
+
+
+def pyramid_stats(pyr: GroupPyramid):
+    """Diagnostics: number of distinct groups per level (host-side)."""
+    import numpy as np
+
+    return [int(np.unique(np.asarray(g)).size) for g in pyr.group_of]

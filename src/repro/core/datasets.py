@@ -1,0 +1,162 @@
+"""Dataset generators matching the paper's Section 5.1.
+
+All synthetic sets live in a ``[0, EXTENT]^2`` world (EXTENT=1000), which
+reproduces the coverage magnitudes of the paper's tables to within a small
+constant factor.  The DCW road/rail files are not available offline; the
+``roadlike`` generator synthesizes sequential, connected, short line segments
+with matching statistics (documented deviation, DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+EXTENT = 1000.0
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+def uniform_squares(n: int, seed: int = 0, side: float = 10.0) -> np.ndarray:
+    """n squares of ``side x side`` units, uniformly distributed."""
+    r = _rng(seed)
+    ll = r.uniform(0.0, EXTENT - side, size=(n, 2))
+    return np.concatenate([ll, ll + side], axis=1)
+
+
+def uniform_points(n: int, seed: int = 0) -> np.ndarray:
+    r = _rng(seed)
+    p = r.uniform(0.0, EXTENT, size=(n, 2))
+    return np.concatenate([p, p], axis=1)
+
+
+def exponential_squares(
+    n: int, seed: int = 0, side: float = 10.0, scale: float = 200.0
+) -> np.ndarray:
+    r = _rng(seed)
+    ll = np.minimum(r.exponential(scale, size=(n, 2)), EXTENT - side)
+    return np.concatenate([ll, ll + side], axis=1)
+
+
+def exponential_points(n: int, seed: int = 0, scale: float = 200.0) -> np.ndarray:
+    r = _rng(seed)
+    p = np.minimum(r.exponential(scale, size=(n, 2)), EXTENT)
+    return np.concatenate([p, p], axis=1)
+
+
+def _lines_to_mbrs(p0: np.ndarray, p1: np.ndarray) -> np.ndarray:
+    lo = np.minimum(p0, p1)
+    hi = np.maximum(p0, p1)
+    return np.concatenate([lo, hi], axis=1)
+
+
+def hv_lines(n: int, seed: int = 0, length: float = 10.0) -> np.ndarray:
+    """50% horizontal / 50% vertical 10-unit lines."""
+    r = _rng(seed)
+    start = r.uniform(0.0, EXTENT - length, size=(n, 2))
+    horiz = r.random(n) < 0.5
+    delta = np.where(horiz[:, None], np.array([[length, 0.0]]), np.array([[0.0, length]]))
+    return _lines_to_mbrs(start, start + delta)
+
+
+def sloped_lines(n: int, seed: int = 0, length: float = 10.0) -> np.ndarray:
+    """Equal mix of slopes 1/2, 1, 2, -1/2, -1, -2 (length-10 lines)."""
+    r = _rng(seed)
+    slopes = np.array([0.5, 1.0, 2.0, -0.5, -1.0, -2.0])
+    s = slopes[r.integers(0, len(slopes), size=n)]
+    dx = length / np.sqrt(1.0 + s**2)
+    dy = s * dx
+    start = r.uniform(np.abs(np.stack([dx, dy], 1)), EXTENT - np.abs(np.stack([dx, dy], 1)))
+    return _lines_to_mbrs(start, start + np.stack([dx, dy], axis=1))
+
+
+def mixed_lines(n: int, seed: int = 0, length: float = 10.0) -> np.ndarray:
+    """Slopes 1/2, 1, 2, -1/2, -1, -2 plus horizontal and vertical."""
+    r = _rng(seed)
+    kinds = r.integers(0, 8, size=n)
+    slopes = np.array([0.5, 1.0, 2.0, -0.5, -1.0, -2.0])
+    dx = np.empty(n)
+    dy = np.empty(n)
+    sloped = kinds < 6
+    s = slopes[np.minimum(kinds, 5)]
+    dx[sloped] = (length / np.sqrt(1.0 + s**2))[sloped]
+    dy[sloped] = (s * length / np.sqrt(1.0 + s**2))[sloped]
+    dx[kinds == 6] = length
+    dy[kinds == 6] = 0.0
+    dx[kinds == 7] = 0.0
+    dy[kinds == 7] = length
+    d = np.stack([dx, dy], axis=1)
+    start = r.uniform(np.abs(d), EXTENT - np.abs(d))
+    return _lines_to_mbrs(start, start + d)
+
+
+def roadlike_lines(n: int, seed: int = 0, step: float = 1.5) -> np.ndarray:
+    """Sequential connected short segments (road/rail surrogate).
+
+    Random walks of ~200-segment "roads": heading evolves smoothly, segment
+    length ~ U(0.5, 1.5)*step, reflected at the world boundary.  Produces the
+    paper's observed regime: tiny, chained MBRs with near-zero overlap.
+    """
+    r = _rng(seed)
+    segs = np.empty((n, 4))
+    i = 0
+    while i < n:
+        road_len = min(int(r.integers(100, 300)), n - i)
+        pos = r.uniform(0.1 * EXTENT, 0.9 * EXTENT, size=2)
+        heading = r.uniform(0, 2 * np.pi)
+        for _ in range(road_len):
+            heading += r.normal(0.0, 0.15)
+            L = step * r.uniform(0.5, 1.5)
+            nxt = pos + L * np.array([np.cos(heading), np.sin(heading)])
+            for d in range(2):
+                if nxt[d] < 0 or nxt[d] > EXTENT:
+                    heading += np.pi / 2
+                    nxt = pos
+                    break
+            segs[i] = [
+                min(pos[0], nxt[0]),
+                min(pos[1], nxt[1]),
+                max(pos[0], nxt[0]),
+                max(pos[1], nxt[1]),
+            ]
+            pos = nxt
+            i += 1
+            if i >= n:
+                break
+    return segs
+
+
+def region_queries(
+    data: np.ndarray, n_queries: int, seed: int = 0, target_found: float = 4.0
+) -> np.ndarray:
+    """Query rectangles sized so a uniform dataset returns ~target_found
+    objects, centred at random data centroids (paper runs 20 per tree)."""
+    r = _rng(seed + 7)
+    n = data.shape[0]
+    side = EXTENT * np.sqrt(target_found / max(n, 1))
+    centers = data[r.integers(0, n, size=n_queries)]
+    cx = (centers[:, 0] + centers[:, 2]) * 0.5
+    cy = (centers[:, 1] + centers[:, 3]) * 0.5
+    q = np.stack([cx - side / 2, cy - side / 2, cx + side / 2, cy + side / 2], axis=1)
+    return q
+
+
+def dense_region_queries(n_queries: int, seed: int = 0, side: float = 450.0) -> np.ndarray:
+    """Fixed large queries anchored near the origin-dense corner, matching the
+    paper's exponential-data search workloads (large #found)."""
+    r = _rng(seed + 13)
+    off = r.uniform(0.0, 80.0, size=(n_queries, 2))
+    return np.concatenate([off, off + side], axis=1)
+
+
+REGISTRY = {
+    "uniform_squares": uniform_squares,
+    "uniform_points": uniform_points,
+    "exponential_squares": exponential_squares,
+    "exponential_points": exponential_points,
+    "hv_lines": hv_lines,
+    "sloped_lines": sloped_lines,
+    "mixed_lines": mixed_lines,
+    "roadlike_lines": roadlike_lines,
+}

@@ -1,0 +1,170 @@
+"""Levelized struct-of-arrays view of a spatial tree + batched JAX search.
+
+TPU adaptation layer (DESIGN.md §3.1): pointer-chasing trees do not
+vectorize, so a built tree (mqr or R) is flattened into dense arrays and
+region search becomes a masked breadth-first frontier sweep expressed with
+``jax.lax`` control flow.  One "disk access" of the paper = one live row of
+the frontier (a node whose entries are examined), so the JAX search reports
+the *same* disk-access count as the host pointer implementation — this
+equivalence is tested in tests/test_flat_search.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .mqrtree import MQRTree
+from .rtree import RTree
+
+EMPTY = -1  # children_idx sentinel: no entry
+# children_idx >= 0   -> index of a child node
+# children_idx <= -2  -> object id encoded as -(obj + 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatTree:
+    """Dense array form of a spatial tree.
+
+    node_mbr:      (N, 4)   float32
+    children_mbr:  (N, F, 4) float32 (F = max fan-out)
+    children_idx:  (N, F)   int32 (see sentinels above)
+    n_objects:     int
+    root:          int (node index of the root, always 0)
+    """
+
+    node_mbr: np.ndarray
+    children_mbr: np.ndarray
+    children_idx: np.ndarray
+    n_objects: int
+    root: int = 0
+
+    @property
+    def n_nodes(self) -> int:
+        return self.node_mbr.shape[0]
+
+
+def flatten(tree) -> FlatTree:
+    """Flatten an ``MQRTree`` or ``RTree`` into a :class:`FlatTree`."""
+    if isinstance(tree, MQRTree):
+        fan = 5
+
+        def node_entries(node):
+            for _, e in node.entries():
+                yield e.mbr, (e.node if e.is_node else None), e.obj
+
+        root = tree.root
+    elif isinstance(tree, RTree):
+        fan = tree.M
+
+        def node_entries(node):
+            for e in node.entries:
+                yield e.mbr, e.child, e.obj
+
+        root = tree.root
+    else:  # pragma: no cover
+        raise TypeError(type(tree))
+
+    nodes = []
+    index = {}
+
+    def assign(node):
+        index[id(node)] = len(nodes)
+        nodes.append(node)
+        for _, child, _ in node_entries(node):
+            if child is not None:
+                assign(child)
+
+    assign(root)
+
+    n = len(nodes)
+    node_mbr = np.zeros((n, 4), np.float32)
+    children_mbr = np.zeros((n, fan, 4), np.float32)
+    children_idx = np.full((n, fan), EMPTY, np.int32)
+    n_objects = 0
+    for ni, node in enumerate(nodes):
+        mbr = node.mbr if isinstance(tree, MQRTree) else node.mbr()
+        node_mbr[ni] = np.asarray(mbr, np.float32)
+        for fi, (embr, child, obj) in enumerate(node_entries(node)):
+            children_mbr[ni, fi] = np.asarray(embr, np.float32)
+            if child is not None:
+                children_idx[ni, fi] = index[id(child)]
+            else:
+                children_idx[ni, fi] = -(obj + 2)
+                n_objects = max(n_objects, obj + 1)
+    return FlatTree(node_mbr, children_mbr, children_idx, n_objects)
+
+
+def _overlaps(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Closed-boundary rectangle intersection, broadcasting."""
+    return (
+        (a[..., 0] <= b[..., 2])
+        & (b[..., 0] <= a[..., 2])
+        & (a[..., 1] <= b[..., 3])
+        & (b[..., 1] <= a[..., 3])
+    )
+
+
+def region_search_batch(
+    flat: FlatTree, queries: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Batched region search.
+
+    Args:
+      flat: flattened tree.
+      queries: (Q, 4) query rectangles.
+
+    Returns:
+      hits:   (Q, n_objects) bool — object overlap mask.
+      visits: (Q,) int32 — node visits (disk accesses), identical to the
+              pointer implementation's count.
+    """
+    children_mbr = jnp.asarray(flat.children_mbr)
+    children_idx = jnp.asarray(flat.children_idx)
+    queries = jnp.asarray(queries, jnp.float32)
+    n, fan = children_idx.shape
+    q = queries.shape[0]
+    n_obj = flat.n_objects
+
+    is_node = children_idx >= 0
+    is_obj = children_idx <= -2
+    obj_ids = jnp.where(is_obj, -(children_idx + 2), 0)
+    child_node = jnp.where(is_node, children_idx, 0)
+
+    def step(state):
+        frontier, visits, hits, _ = state
+        visits = visits + frontier.sum(axis=1, dtype=jnp.int32)
+        # (Q, N, F): does entry f of node n overlap query q?
+        ov = _overlaps(children_mbr[None, :, :, :], queries[:, None, None, :])
+        act = frontier[:, :, None] & ov
+        # record object hits
+        def per_query(hits_q, act_q):
+            vals = (act_q & is_obj).reshape(-1)
+            ids = obj_ids.reshape(-1)
+            return hits_q.at[ids].max(vals)
+
+        hits = jax.vmap(per_query)(hits, act)
+        # propagate frontier to child nodes
+        def frontier_query(act_q):
+            vals = (act_q & is_node).reshape(-1)
+            ids = child_node.reshape(-1)
+            return jnp.zeros((n,), bool).at[ids].max(vals)
+
+        nxt = jax.vmap(frontier_query)(act)
+        return nxt, visits, hits, nxt.any()
+
+    def cond(state):
+        return state[3]
+
+    frontier0 = jnp.zeros((q, n), bool).at[:, flat.root].set(True)
+    visits0 = jnp.zeros((q,), jnp.int32)
+    hits0 = jnp.zeros((q, max(n_obj, 1)), bool)
+    frontier, visits, hits, _ = jax.lax.while_loop(
+        cond, step, (frontier0, visits0, hits0, jnp.array(True))
+    )
+    return np.asarray(hits), np.asarray(visits)

@@ -1,0 +1,205 @@
+"""mqr-KV: the paper's spatial index over a transformer KV cache.
+
+DESIGN.md §3: KV positions are grouped into fixed-size blocks; each block
+gets a 2-D MBR over ``(token position, k·u)`` where ``u`` is a per-head probe
+direction.  Blocks are organized by the mqr quadrant-centroid rule (bulk
+pyramid, :mod:`repro.core.bulk`), and a decode query performs a *region
+search* — position window × query-dependent score range — to select the
+K most relevant blocks (static K for XLA).  Sparse attention then reads only
+those blocks.
+
+The paper's zero-overlap property for point data means sibling group MBRs of
+the (position, score) centroids partition cleanly: each HBM block fetch is
+unique useful bytes — the 2012 "fewer disk accesses" result becomes a
+smaller roofline memory term (EXPERIMENTS.md §Perf).
+
+All functions are single-(head,batch); callers vmap.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .bulk import GroupPyramid, build_pyramid, pyramid_search, _overlaps
+
+DEFAULT_BLOCK = 128
+DEFAULT_LEVELS = 6
+
+
+class KVIndex(NamedTuple):
+    block_mbr: jnp.ndarray   # (nb, 4) f32: [lo_pos, lo_score, hi_pos, hi_score]
+    pyramid: GroupPyramid    # mqr group pyramid over the block MBR centroids
+
+
+def block_mbrs(keys: jnp.ndarray, probe: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """Per-block MBRs in (position, score) space.
+
+    keys: (S, d); probe: (d,).  S must be a multiple of block_size.
+    """
+    s, _ = keys.shape
+    nb = s // block_size
+    scores = (keys @ probe).reshape(nb, block_size)
+    pos = jnp.arange(s, dtype=jnp.float32).reshape(nb, block_size)
+    return jnp.stack(
+        [pos.min(1), scores.min(1), pos.max(1), scores.max(1)], axis=-1
+    )
+
+
+def build_kv_index(
+    keys: jnp.ndarray,
+    probe: jnp.ndarray,
+    block_size: int = DEFAULT_BLOCK,
+    levels: int = DEFAULT_LEVELS,
+) -> KVIndex:
+    bm = block_mbrs(keys, probe, block_size)
+    return KVIndex(block_mbr=bm, pyramid=build_pyramid(bm, levels))
+
+
+def query_region(
+    q: jnp.ndarray,
+    probe: jnp.ndarray,
+    kv_len,
+    score_halfwidth: float = 2.0,
+    pos_lo: float = 0.0,
+) -> jnp.ndarray:
+    """Decode-query region: full causal position window x score band around
+    the query's own probe projection.  ``score_halfwidth`` is in units of the
+    query-score scale (beyond-paper knob; the paper's region is an input)."""
+    sq = q @ probe
+    width = score_halfwidth * (jnp.abs(sq) + 1.0)
+    return jnp.stack(
+        [
+            jnp.asarray(pos_lo, jnp.float32),
+            sq - width,
+            jnp.asarray(kv_len, jnp.float32),
+            sq + width,
+        ]
+    )
+
+
+def select_blocks(index: KVIndex, region: jnp.ndarray, k: int) -> jnp.ndarray:
+    """mqr region search + static top-K.
+
+    Returns (k,) int32 block ids; ids may repeat only when fewer than k
+    blocks survive the region search (callers mask via the returned order:
+    survivors first, then the highest-overlap non-survivors as padding —
+    attention over padding is still *correct*, just not pruned).
+    """
+    survive = pyramid_search(index.pyramid, region)  # (nb,) bool
+    # Overlap area between block MBR and the region = relevance score.
+    bm = index.block_mbr
+    w = jnp.minimum(bm[:, 2], region[2]) - jnp.maximum(bm[:, 0], region[0])
+    h = jnp.minimum(bm[:, 3], region[3]) - jnp.maximum(bm[:, 1], region[1])
+    area = jnp.clip(w, 0.0, None) * jnp.clip(h, 0.0, None)
+    # survivors strictly dominate; among them larger overlap first.
+    score = jnp.where(survive, 1e6 + area, area)
+    _, ids = jax.lax.top_k(score, k)
+    return ids.astype(jnp.int32)
+
+
+def select_blocks_batched(index_mbr, pyramid, regions, k):
+    """vmapped helper used by models: regions (H, 4) -> (H, k)."""
+    idx = KVIndex(index_mbr, pyramid)
+    return jax.vmap(lambda r: select_blocks(idx, r, k))(regions)
+
+
+# ---------------------------------------------------------------------------
+# Incremental index maintenance (beyond-paper optimization, EXPERIMENTS §Perf)
+#
+# Rebuilding the index each decode step re-reads the whole key cache — the
+# memory-roofline term then equals dense attention's.  Instead the index
+# lives in the KV cache and is updated per token with MONOTONE MBR growth:
+# the new key's (position, score) point is merged into its block MBR and
+# into every ancestor group MBR.  Group membership is frozen (from the
+# initial position-only pyramid); growth keeps every group MBR a superset of
+# its true bounds, so region search stays conservative (no false negatives)
+# — the cost is overcoverage, exactly the quantity the paper trades against
+# access count.
+# ---------------------------------------------------------------------------
+
+
+class IncKVIndex(NamedTuple):
+    block_mbr: jnp.ndarray   # (nb, 4)
+    group_mbr: jnp.ndarray   # (L, nb, 4) — padded by dense group id
+    group_of: jnp.ndarray    # (L, nb) int32 — frozen membership
+
+
+def init_incremental(nb: int, block_size: int, levels: int) -> IncKVIndex:
+    """Position-only initial pyramid; score extents start EMPTY (+inf/-inf)
+    so unwritten blocks never overlap a query region."""
+    pos_lo = jnp.arange(nb, dtype=jnp.float32) * block_size
+    pos_hi = pos_lo + (block_size - 1)
+    inf = jnp.float32(3.4e38)
+    block_mbr = jnp.stack(
+        [pos_lo, jnp.full((nb,), inf), pos_hi, jnp.full((nb,), -inf)], axis=-1
+    )
+    # membership from the position-centroid pyramid (scores all equal 0 at
+    # freeze time -> splits happen on the position axis)
+    seed = jnp.stack([pos_lo, jnp.zeros((nb,)), pos_hi, jnp.zeros((nb,))], -1)
+    pyr = build_pyramid(seed, levels)
+    group_mbr = jnp.broadcast_to(block_mbr[None], (levels, nb, 4)).copy()
+    # scatter block mbrs into dense-group slots (min/max per group)
+    def level_bounds(gof):
+        lo_x = jax.ops.segment_min(block_mbr[:, 0], gof, num_segments=nb)
+        lo_s = jax.ops.segment_min(block_mbr[:, 1], gof, num_segments=nb)
+        hi_x = jax.ops.segment_max(block_mbr[:, 2], gof, num_segments=nb)
+        hi_s = jax.ops.segment_max(block_mbr[:, 3], gof, num_segments=nb)
+        return jnp.stack([lo_x, lo_s, hi_x, hi_s], axis=-1)
+
+    group_mbr = jax.vmap(level_bounds)(pyr.group_of)
+    return IncKVIndex(block_mbr, group_mbr, pyr.group_of)
+
+
+def incremental_update(
+    idx: IncKVIndex, pos, score, block_size: int
+) -> IncKVIndex:
+    """Merge the new key's (pos, score) point into its block + ancestors."""
+    pos = jnp.asarray(pos)
+    b = (pos // block_size).astype(jnp.int32)
+    pf = pos.astype(jnp.float32)
+    sf = jnp.asarray(score).astype(jnp.float32)
+
+    def merge_point(m):
+        return jnp.stack(
+            [
+                jnp.minimum(m[0], pf),
+                jnp.minimum(m[1], sf),
+                jnp.maximum(m[2], pf),
+                jnp.maximum(m[3], sf),
+            ]
+        )
+
+    block_mbr = idx.block_mbr.at[b].set(merge_point(idx.block_mbr[b]))
+
+    def level_update(gm, gof):
+        g = gof[b]
+        return gm.at[g].set(merge_point(gm[g]))
+
+    group_mbr = jax.vmap(level_update)(idx.group_mbr, idx.group_of)
+    return IncKVIndex(block_mbr, group_mbr, idx.group_of)
+
+
+def incremental_select(idx: IncKVIndex, region: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Region search against the incrementally-maintained pyramid: reads
+    O((L+1)*nb) floats — never the key cache."""
+    # per-level survival via frozen membership
+    anc = jnp.take_along_axis(
+        idx.group_mbr, idx.group_of[:, :, None].repeat(4, axis=2), axis=1
+    )  # (L, nb, 4)
+    ov = (
+        (anc[..., 0] <= region[2])
+        & (region[0] <= anc[..., 2])
+        & (anc[..., 1] <= region[3])
+        & (region[1] <= anc[..., 3])
+    )
+    survive = ov.all(axis=0)
+    bm = idx.block_mbr
+    w = jnp.minimum(bm[:, 2], region[2]) - jnp.maximum(bm[:, 0], region[0])
+    h = jnp.minimum(bm[:, 3], region[3]) - jnp.maximum(bm[:, 1], region[1])
+    area = jnp.clip(w, 0.0, None) * jnp.clip(h, 0.0, None)
+    score = jnp.where(survive, 1e6 + area, area)
+    _, ids = jax.lax.top_k(score, k)
+    return ids.astype(jnp.int32)

@@ -1,0 +1,2 @@
+from .pipeline import DataConfig, SyntheticLM, make_batch_fn  # noqa: F401
+from .spatial_router import route_shards  # noqa: F401

@@ -1,0 +1,61 @@
+"""Elastic re-meshing: rebuild the device mesh after node loss and compute
+the resharding plan for a checkpointed state.
+
+The contract at 1000+ nodes: when hosts drop, the job restarts from the
+latest checkpoint on the surviving device set.  Parameters were saved with
+*logical* axes (the PartitionSpec tree is a pure function of the param tree
+via repro.sharding.rules), so resharding = re-deriving specs on the new
+mesh; nothing about the checkpoint format depends on the old topology.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+
+from repro.sharding import rules
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    n_devices: int
+    dropped: int
+
+
+def plan_mesh(n_available: int, *, model_parallel: int = 16,
+              multi_pod_threshold: int = 512) -> MeshPlan:
+    """Largest well-formed mesh on the surviving devices.
+
+    Keeps the model axis fixed (TP degree is a property of the model fit),
+    shrinks the data axis, and drops remainder devices (they rejoin at the
+    next re-mesh — the standard elastic-DP contract).
+    """
+    mp = model_parallel
+    usable = (n_available // mp) * mp
+    if usable == 0:
+        raise ValueError(f"cannot keep model_parallel={mp} with {n_available} devices")
+    data = usable // mp
+    if usable >= multi_pod_threshold and data % 2 == 0:
+        return MeshPlan((2, data // 2, mp), ("pod", "data", "model"),
+                        usable, n_available - usable)
+    return MeshPlan((data, mp), ("data", "model"), usable, n_available - usable)
+
+
+def build_mesh(plan: MeshPlan, devices: Optional[List] = None):
+    devices = devices if devices is not None else jax.devices()
+    import numpy as np
+
+    grid = np.array(devices[: plan.n_devices]).reshape(plan.shape)
+    return jax.sharding.Mesh(grid, plan.axis_names)
+
+
+def reshard_plan(params_abs, old_mesh, new_mesh):
+    """(old_spec, new_spec) pairs per leaf — the logical axes are identical,
+    only the mesh changed, so this is exactly the device_put plan."""
+    old = rules.param_specs(params_abs, old_mesh)
+    new = rules.param_specs(params_abs, new_mesh)
+    return jax.tree.map(lambda o, n: (o, n), old, new)

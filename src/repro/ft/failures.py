@@ -1,0 +1,31 @@
+"""Failure injection for fault-tolerance tests: deterministic or random
+crashes at step boundaries (the train loop calls ``maybe_fail(step)``)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+class FailureInjector:
+    def __init__(self, fail_at_step: Optional[int] = None,
+                 fail_prob: float = 0.0, seed: int = 0, max_failures: int = 1):
+        self.fail_at_step = fail_at_step
+        self.fail_prob = fail_prob
+        self.rng = np.random.default_rng(seed)
+        self.remaining = max_failures
+
+    def maybe_fail(self, step: int) -> None:
+        if self.remaining <= 0:
+            return
+        hit = (self.fail_at_step is not None and step == self.fail_at_step) or (
+            self.fail_prob > 0 and self.rng.random() < self.fail_prob
+        )
+        if hit:
+            self.remaining -= 1
+            raise InjectedFailure(f"injected node failure at step {step}")

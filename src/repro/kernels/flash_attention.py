@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: causal flash attention forward (MaxText-style).
+
+Grid = (batch*heads, n_q_blocks, n_kv_blocks); the kv dim is innermost and
+sequential on TPU, so the running-softmax accumulators live in VMEM scratch
+and persist across kv steps.  Causal blocks above the diagonal are skipped
+via ``pl.when`` (their tiles are still indexed but not computed — the
+block-level equivalent of the paper's pruned subtrees).
+
+Shapes: q/k/v are (BH, S, D) with kv heads pre-broadcast to full heads by
+ops.py.  block sizes default to the MXU-native 128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, block_q,
+            block_k, scale):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: kv block strictly after the q block contributes nothing
+    @pl.when(ki * block_k <= qi * block_q + block_q - 1)
+    def _compute():
+        q = q_ref[0]  # (block_q, D)
+        k = k_ref[0]  # (block_k, D)
+        v = v_ref[0]
+        logits = (
+            jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            * scale
+        )
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(qpos >= kpos, logits, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,  # (BH, S, D)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    scale = 1.0 / (d ** 0.5)
+    grid = (bh, s // block_q, s // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_q=block_q, block_k=block_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

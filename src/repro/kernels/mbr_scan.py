@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: batched MBR overlap scan (one mqr level per call).
+
+The TPU form of the paper's region search inner loop: a level of the
+levelized mqr-tree is a dense (N, 4) array of MBRs; each grid step streams
+one VMEM tile of MBRs and tests it against the resident query rectangles on
+the VPU.  One tile fetch = one "disk access" of the paper, so the kernel's
+HBM traffic is exactly the quantity the mqr-tree minimizes (DESIGN.md §3).
+
+Layout: MBRs are stored coordinate-major as (4, N) so each coordinate is a
+contiguous lane vector; N is tiled in ``block_n`` lanes.  Queries (Q, 4) are
+small and stay resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, mbr_ref, out_ref):
+    # q_ref: (Q, 4) resident; mbr_ref: (4, BN) tile; out_ref: (Q, BN)
+    lx = mbr_ref[0, :]
+    ly = mbr_ref[1, :]
+    hx = mbr_ref[2, :]
+    hy = mbr_ref[3, :]
+    qlx = q_ref[:, 0][:, None]
+    qly = q_ref[:, 1][:, None]
+    qhx = q_ref[:, 2][:, None]
+    qhy = q_ref[:, 3][:, None]
+    out_ref[...] = (
+        (lx[None, :] <= qhx)
+        & (qlx <= hx[None, :])
+        & (ly[None, :] <= qhy)
+        & (qly <= hy[None, :])
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def mbr_scan(
+    mbrs: jnp.ndarray,      # (N, 4) float32
+    queries: jnp.ndarray,   # (Q, 4) float32
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns (Q, N) bool overlap mask."""
+    n = mbrs.shape[0]
+    q = queries.shape[0]
+    pad = (-n) % block_n
+    # pad with never-overlapping sentinels
+    mbrs_p = jnp.concatenate(
+        [mbrs, jnp.full((pad, 4), jnp.inf, mbrs.dtype)], axis=0
+    ) if pad else mbrs
+    mt = mbrs_p.T  # (4, N_pad) coordinate-major
+    n_pad = mt.shape[1]
+    grid = (n_pad // block_n,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q, 4), lambda i: (0, 0)),
+            pl.BlockSpec((4, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((q, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((q, n_pad), jnp.bool_),
+        interpret=interpret,
+    )(queries, mt)
+    return out[:, :n]

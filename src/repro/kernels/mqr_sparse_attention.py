@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: mqr-KV block-table decode attention.
+
+The consumer of the paper's region search: given the top-K block ids chosen
+by the mqr index (repro.core.kvindex), attend over ONLY those KV blocks.
+Block ids are scalar-prefetched (PrefetchScalarGridSpec) so the BlockSpec
+index_map can chase the block table — the TPU equivalent of the paper's
+pointer dereference, resolved at tile-fetch granularity.  Zero-overlap
+sibling MBRs (paper §4) mean no block is fetched twice: HBM traffic is
+exactly K·bs·D·2 bytes per (batch, head).
+
+Shapes: q (BH, D); k/v blocks (BH, nb, bs, D); ids (BH, K) int32.
+Grid = (BH, K), K innermost/sequential; softmax state in VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(ids_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+            acc_scr, *, block_size, scale):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+    bh = pl.program_id(0)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...]        # (1, D) — row vector
+    k = k_ref[0, 0]       # (bs, D)
+    v = v_ref[0, 0]
+    logits = (
+        jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        * scale
+    )  # (1, bs)
+    block_id = ids_ref[bh, ki]
+    kpos = block_id * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, 1
+    )
+    logits = jnp.where(kpos <= pos_ref[0], logits, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[...] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mqr_sparse_attention(
+    q: jnp.ndarray,        # (BH, D)
+    k_blocks: jnp.ndarray,  # (BH, nb, bs, D)
+    v_blocks: jnp.ndarray,  # (BH, nb, bs, D)
+    ids: jnp.ndarray,       # (BH, K) int32
+    pos: jnp.ndarray,       # scalar int32 causal limit (inclusive)
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, nb, bs, d = k_blocks.shape
+    kk = ids.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # ids, pos
+        grid=(bh, kk),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, k, ids_ref, pos_ref: (b, 0)),
+            pl.BlockSpec(
+                (1, 1, bs, d),
+                lambda b, k, ids_ref, pos_ref: (b, ids_ref[b, k], 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bs, d),
+                lambda b, k, ids_ref, pos_ref: (b, ids_ref[b, k], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b, k, ids_ref, pos_ref: (b, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, block_size=bs, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, d), q.dtype),
+        interpret=interpret,
+    )(ids, pos.reshape(1), q, k_blocks, v_blocks)

@@ -1,0 +1,58 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute with ``interpret=True`` (the
+Pallas interpreter runs the kernel body in Python for correctness); on a
+real TPU runtime set ``REPRO_PALLAS_COMPILE=1`` to lower them natively.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .mbr_scan import mbr_scan as _mbr_scan
+from .mqr_sparse_attention import mqr_sparse_attention as _sparse
+from .rmsnorm import rmsnorm as _rmsnorm
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def mbr_scan(mbrs, queries, *, block_n: int = 512):
+    """(N,4) x (Q,4) -> (Q,N) overlap mask via the Pallas level-scan."""
+    return _mbr_scan(
+        jnp.asarray(mbrs, jnp.float32),
+        jnp.asarray(queries, jnp.float32),
+        block_n=block_n,
+        interpret=_interpret(),
+    )
+
+
+def flash_attention(q, k, v, *, block_q: int = 128, block_k: int = 128):
+    """Causal flash attention, (BH, S, D). kv heads must be pre-broadcast."""
+    return _flash(q, k, v, block_q=block_q, block_k=block_k,
+                  interpret=_interpret())
+
+
+def mqr_sparse_attention(q, k_blocks, v_blocks, ids, pos):
+    """Block-table decode attention over mqr-selected blocks."""
+    return _sparse(q, k_blocks, v_blocks, ids, jnp.asarray(pos, jnp.int32),
+                   interpret=_interpret())
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    return _rmsnorm(x, scale, eps, interpret=_interpret())
+
+
+# re-export oracles for tests/benches
+mbr_scan_ref = ref.mbr_scan_ref
+flash_attention_ref = ref.flash_attention_ref
+mqr_sparse_attention_ref = ref.mqr_sparse_attention_ref
+rmsnorm_ref = ref.rmsnorm_ref

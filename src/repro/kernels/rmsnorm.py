@@ -1,0 +1,44 @@
+"""Pallas TPU kernel: fused RMSNorm over the last dim (rows tiled in VMEM)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * s_ref[...].astype(jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(
+    x: jnp.ndarray,      # (R, D)
+    scale: jnp.ndarray,  # (D,)
+    eps: float = 1e-6,
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    r, d = x.shape
+    br = min(block_rows, r)
+    pad = (-r) % br
+    xp = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)]) if pad else x
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(xp.shape[0] // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp, scale.reshape(1, d))
+    return out[:r]

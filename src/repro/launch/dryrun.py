@@ -1,0 +1,302 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count at first init).
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import registry  # noqa: E402
+from repro.launch import hlo_cost  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+from repro.sharding import rules  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+record memory/cost/collective analyses for EXPERIMENTS.md §Dry-run and
+§Roofline.  No arrays are ever materialized (ShapeDtypeStruct only).
+"""
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def parse_collectives(hlo: str):
+    """Sum operand bytes of every collective in post-SPMD HLO (per device),
+    plus a ring-model estimate of wire bytes (DESIGN.md §4.2)."""
+    defs = {}
+    instr = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?)([a-z0-9]+)\[([0-9,]*)\]")
+    tuple_instr = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    for line in hlo.splitlines():
+        m = instr.match(line)
+        if not m:
+            continue
+        name, is_tuple, dt, dims = m.groups()
+        if is_tuple:
+            total = 0
+            header = line.split("=", 1)[1].split("(", 2)
+            # tuple type text up to the op name
+            tup = line.split("=", 1)[1]
+            tup = tup[: tup.find(")") + 1]
+            for dt2, dims2 in tuple_instr.findall(tup):
+                nb = _DTYPE_BYTES.get(dt2, 4)
+                n = 1
+                for d in dims2.split(","):
+                    if d:
+                        n *= int(d)
+                total += n * nb
+            defs[name] = total
+        else:
+            nb = _DTYPE_BYTES.get(dt, 4)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            defs[name] = n * nb
+
+    out = {op: {"count": 0, "operand_bytes": 0, "wire_bytes": 0} for op in _COLL_OPS}
+    coll_re = re.compile(
+        r"=\s*\(?[a-z0-9]+\[[0-9,]*\][^(]*?\b(" + "|".join(_COLL_OPS) + r")(-start)?\("
+    )
+    group_re = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+    group_re2 = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+    for line in hlo.splitlines():
+        m = coll_re.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        # operands: %names inside the call parens
+        call = line[m.end():]
+        call = call[: call.find(")")] if ")" in call else call
+        operands = re.findall(r"%([\w\.\-]+)", call)
+        ob = sum(defs.get(o, 0) for o in operands)
+        gm = group_re.search(line)
+        if gm:
+            gsize = int(gm.group(2))
+        else:
+            gm2 = group_re2.search(line)
+            gsize = len(gm2.group(1).split(",")) if gm2 else 2
+        n = max(gsize, 2)
+        factor = {
+            "all-reduce": 2.0 * (n - 1) / n,
+            "all-gather": float(n - 1),
+            "reduce-scatter": (n - 1) / n,
+            "all-to-all": (n - 1) / n,
+            "collective-permute": 1.0,
+        }[op]
+        out[op]["count"] += 1
+        out[op]["operand_bytes"] += ob
+        out[op]["wire_bytes"] += int(ob * factor)
+    out["total_operand_bytes"] = sum(v["operand_bytes"] for v in out.values() if isinstance(v, dict))
+    out["total_wire_bytes"] = sum(v["wire_bytes"] for v in out.values() if isinstance(v, dict))
+    return out
+
+
+def _apply_overrides(cfg, overrides):
+    if not overrides:
+        return cfg
+    kw = {}
+    for ov in overrides:
+        k, v = ov.split("=", 1)
+        field = {f.name: f for f in dataclasses.fields(cfg)}[k]
+        if field.type in ("int", int):
+            v = int(v)
+        elif field.type in ("float", float):
+            v = float(v)
+        elif field.type in ("bool", bool):
+            v = v.lower() in ("1", "true")
+        kw[k] = v
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: pathlib.Path,
+             overrides=None, tag: str = "", force: bool = False):
+    mesh_name = "multi" if multi_pod else "single"
+    suffix = f"__{tag}" if tag else ""
+    out_path = out_dir / f"{arch}__{shape}__{mesh_name}{suffix}.json"
+    if out_path.exists() and not force:
+        print(f"[skip] {out_path.name}")
+        return json.loads(out_path.read_text())
+
+    cfg = registry.get_config(arch)
+    cfg = _apply_overrides(cfg, overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    kind = registry.SHAPES[shape]["kind"]
+    seq = registry.SHAPES[shape]["seq_len"]
+    gbatch = registry.SHAPES[shape]["global_batch"]
+
+    record = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "tag": tag,
+        "n_devices": n_dev, "kind": kind, "seq_len": seq, "global_batch": gbatch,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "overrides": list(overrides or []),
+    }
+    t0 = time.time()
+
+    params_abs = steps.abstract_params(cfg)
+    params_sh = rules.param_shardings(params_abs, mesh)
+    specs = registry.input_specs(cfg, shape)
+
+    with mesh:
+        if kind == "train":
+            # bf16 moments for >100B models: the recorded memory-fit choice.
+            opt_cfg = adamw.AdamWConfig(
+                moments_dtype="bfloat16" if cfg.param_count() > 100e9 else "float32"
+            )
+            record["moments_dtype"] = opt_cfg.moments_dtype
+            opt_abs = steps.abstract_opt_state(params_abs, opt_cfg)
+            opt_sh = jax.tree.map(
+                lambda s: s,
+                adamw.AdamWState(
+                    step=NamedSharding(mesh, P()),
+                    m=rules.param_shardings(params_abs, mesh),
+                    v=rules.param_shardings(params_abs, mesh),
+                ),
+            )
+            batch_abs = specs["batch"]
+            batch_sh = rules.batch_shardings(batch_abs, mesh)
+            fn = steps.make_train_step(cfg, opt_cfg)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(params_sh, opt_sh, batch_sh),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+            # model flops: 6 * N_active * tokens
+            tokens = gbatch * seq
+            record["model_flops"] = 6 * cfg.active_param_count() * tokens
+        elif kind == "prefill":
+            batch_abs = specs["batch"]
+            batch_sh = rules.batch_shardings(batch_abs, mesh)
+            fn = steps.make_prefill_step(cfg)
+            jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params_abs, batch_abs)
+            record["model_flops"] = 2 * cfg.active_param_count() * gbatch * seq
+        else:  # decode
+            has_kv_attn = any(
+                k in ("attn", "mla") for k in cfg.block_pattern + cfg.tail_pattern
+            )
+            mqr = shape == "long_500k" and has_kv_attn
+            if "dense" in tag:
+                mqr = False  # full-attention baseline for §Perf comparison
+            record["mqr_sparse"] = bool(mqr)
+            caches_abs = specs["caches"]
+            caches_sh = rules.cache_shardings(caches_abs, mesh)
+            tok_sh = NamedSharding(mesh, rules.batch_spec(specs["tokens"].shape, mesh))
+            fn = steps.make_serve_step(cfg, mqr_sparse=mqr)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(params_sh, tok_sh, caches_sh, NamedSharding(mesh, P())),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(
+                params_abs, specs["tokens"], caches_abs, specs["pos"]
+            )
+            # per-step decode flops: 2 * N_active * batch (+ KV read is memory)
+            record["model_flops"] = 2 * cfg.active_param_count() * gbatch
+
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    mem = compiled.memory_analysis()
+    record["memory"] = {
+        "argument_bytes_per_device": int(mem.argument_size_in_bytes),
+        "output_bytes_per_device": int(mem.output_size_in_bytes),
+        "temp_bytes_per_device": int(mem.temp_size_in_bytes),
+        "alias_bytes_per_device": int(mem.alias_size_in_bytes),
+        "peak_bytes_per_device": int(
+            mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes
+        ),
+    }
+    ca = compiled.cost_analysis() or {}
+    # Loop-aware correction: XLA cost analysis counts while bodies once;
+    # hlo_cost multiplies by trip counts (layer scans, kv-chunk scans...).
+    hlo_txt = compiled.as_text()
+    corr = hlo_cost.corrected_costs(
+        hlo_txt, float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0))
+    )
+    record["cost"] = {
+        "flops_per_device": corr["flops_per_device"],
+        "bytes_accessed_per_device": corr["bytes_accessed_per_device"],
+        "flops_per_device_xla_raw": float(ca.get("flops", -1)),
+        "bytes_per_device_xla_raw": float(ca.get("bytes accessed", -1)),
+        "loop_flops_ratio": corr["flops_ratio"],
+        "loop_bytes_ratio": corr["bytes_ratio"],
+        "transcendentals": float(ca.get("transcendentals", 0)),
+    }
+    record["collectives"] = corr["collectives"]
+    record["lower_s"] = round(t_lower - t0, 2)
+    record["compile_s"] = round(t_compile - t_lower, 2)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(record, indent=1))
+    pk = record["memory"]["peak_bytes_per_device"] / 2**30
+    print(
+        f"[ok] {out_path.name}: peak={pk:.2f} GiB/dev "
+        f"flops/dev={record['cost']['flops_per_device']:.3e} "
+        f"coll_wire={record['collectives']['total_wire_bytes']/2**30:.3f} GiB "
+        f"(lower {record['lower_s']}s, compile {record['compile_s']}s)"
+    )
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--override", action="append", default=[],
+                    help="ModelConfig field=value (perf iterations)")
+    ap.add_argument("--tag", default="", help="suffix for the output JSON")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(registry.ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(registry.SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    out_dir = pathlib.Path(args.out)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, mp, out_dir, args.override, args.tag,
+                             args.force)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[FAIL] {arch} {shape} {'multi' if mp else 'single'}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nALL CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

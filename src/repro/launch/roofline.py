@@ -1,0 +1,107 @@
+"""Roofline analysis over the dry-run JSONs (DESIGN.md §4.2).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs_global / (chips * peak)   [seconds/step]
+  memory term     = HLO_bytes_global / (chips * HBM_bw)
+  collective term = wire_bytes_per_device / link_bw
+(cost_analysis returns PER-DEVICE post-SPMD numbers; global = x chips.
+ wire bytes already include ring-cost factors per op — see dryrun.py.)
+
+Also reports MODEL_FLOPS / HLO_FLOPs (useful-compute fraction: catches remat
+recompute, dispatch overhead, masked-attention waste) and the bound term.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+LINK_BW = 50e9          # bytes/s / link
+
+
+def load_cells(dry_dir: str, tag: str = "") -> List[Dict]:
+    out = []
+    for p in sorted(pathlib.Path(dry_dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        if (rec.get("tag") or "") != tag:
+            continue
+        out.append(rec)
+    return out
+
+
+def analyze(rec: Dict) -> Dict:
+    chips = rec["n_devices"]
+    flops_dev = rec["cost"]["flops_per_device"]
+    bytes_dev = rec["cost"]["bytes_accessed_per_device"]
+    wire_dev = rec["collectives"]["total_wire_bytes"]
+    t_compute = flops_dev * chips / (chips * PEAK_FLOPS)
+    t_memory = bytes_dev * chips / (chips * HBM_BW)
+    t_coll = wire_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bound = max(terms, key=terms.get)
+    model_flops = rec.get("model_flops", 0)
+    hlo_global = flops_dev * chips
+    useful = model_flops / hlo_global if hlo_global > 0 else float("nan")
+    # roofline fraction: useful model flops per chip-second at the bound
+    step_time = max(terms.values())
+    mfu = model_flops / (chips * PEAK_FLOPS * step_time) if step_time > 0 else 0.0
+    return {
+        **rec,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bound": bound,
+        "useful_flops_ratio": useful,
+        "roofline_mfu": mfu,
+        "peak_gib": rec["memory"]["peak_bytes_per_device"] / 2**30,
+    }
+
+
+def table(cells: List[Dict]) -> str:
+    rows = [
+        "| arch | shape | mesh | compute s | memory s | collective s | bound "
+        "| useful/HLO | roofline-MFU | peak GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        a = analyze(c)
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {a['t_compute_s']:.3e} | {a['t_memory_s']:.3e} "
+            f"| {a['t_collective_s']:.3e} | **{a['bound']}** "
+            f"| {a['useful_flops_ratio']:.2f} | {a['roofline_mfu']:.3f} "
+            f"| {a['peak_gib']:.2f} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    cells = load_cells(args.dir, args.tag)
+    if args.csv:
+        print("arch,shape,mesh,t_compute,t_memory,t_collective,bound,"
+              "useful_ratio,roofline_mfu,peak_gib")
+        for c in cells:
+            a = analyze(c)
+            print(
+                f"{a['arch']},{a['shape']},{a['mesh']},{a['t_compute_s']:.4e},"
+                f"{a['t_memory_s']:.4e},{a['t_collective_s']:.4e},{a['bound']},"
+                f"{a['useful_flops_ratio']:.3f},{a['roofline_mfu']:.4f},"
+                f"{a['peak_gib']:.2f}"
+            )
+    else:
+        print(table(cells))
+
+
+if __name__ == "__main__":
+    main()

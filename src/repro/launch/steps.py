@@ -1,0 +1,66 @@
+"""Jit-able step functions shared by train.py / serve.py / dryrun.py."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.optim.compress import ef_int8_compress
+
+
+def make_train_step(cfg: T.ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    grad_compress: bool = False):
+    """(params, opt_state, batch[, ef_state]) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch, ef_state=None):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: T.loss_and_aux(p, cfg, batch), has_aux=True
+        )(params)
+        if grad_compress:
+            grads, ef_state = ef_int8_compress(grads, ef_state)
+        params, opt_state, metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics = dict(metrics, loss=loss, expert_load_max=jnp.max(aux["expert_load"]))
+        if grad_compress:
+            return params, opt_state, ef_state, metrics
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: T.ModelConfig):
+    def prefill_step(params, batch):
+        return T.prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: T.ModelConfig, mqr_sparse: bool = False):
+    """One decode step: greedy next token + updated caches."""
+
+    def serve_step(params, tokens, caches, pos):
+        logits, caches = T.decode_step(
+            params, cfg, tokens, caches, pos, mqr_sparse=mqr_sparse
+        )
+        # mask vocab-padding ids (see ModelConfig.padded_vocab)
+        vocab_ids = jnp.arange(logits.shape[-1])
+        logits = jnp.where(vocab_ids < cfg.vocab_size, logits, -jnp.inf)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return serve_step
+
+
+def abstract_params(cfg: T.ModelConfig):
+    """ShapeDtypeStruct tree of the model parameters (no allocation)."""
+    return jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_opt_state(params_abs, opt_cfg: adamw.AdamWConfig):
+    return jax.eval_shape(lambda: adamw.init_state(params_abs, opt_cfg))

@@ -1,0 +1,1 @@
+from .transformer import ModelConfig, init_params, loss_and_aux, prefill, decode_step, init_caches  # noqa: F401

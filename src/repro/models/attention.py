@@ -1,0 +1,427 @@
+"""Attention mixers: GQA/MQA full + sliding-window, flash-style chunked
+training path, decode with KV cache, and the mqr-KV sparse decode path
+(the paper's technique; DESIGN.md §3).
+
+Shapes: hidden (B, S, D); q (B, S, H, Dh); kv (B, S, Hkv, Dh).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvindex
+from .modules import apply_rope, dense_init, shard
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, d_model: int) -> Dict:
+    dh = cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    params = {
+        "wq": dense_init(ks[0], d_model, (cfg.n_heads, dh), dt),
+        "wk": dense_init(ks[1], d_model, (cfg.n_kv_heads, dh), dt),
+        "wv": dense_init(ks[2], d_model, (cfg.n_kv_heads, dh), dt),
+        "wo": dense_init(ks[3], cfg.n_heads * dh, (d_model,), dt),
+        # mqr-KV probe direction per kv head (the 2-D score axis).
+        "probe": dense_init(jax.random.fold_in(key, 9), dh, (cfg.n_kv_heads,), jnp.float32).T,
+    }
+    return params
+
+
+def _project_qkv(params, cfg, x, positions):
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def flash_attention_jnp(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_positions: jnp.ndarray,
+    kv_positions: jnp.ndarray,
+    window: Optional[int] = None,
+    chunk: int = 1024,
+) -> jnp.ndarray:
+    """Causal (optionally windowed) attention, never materializing (S, S).
+
+    q: (B, S, H, Dh); k/v: (B, Skv, Hkv, Dh).  Scan over KV chunks with a
+    running-softmax accumulator (portable equivalent of the Pallas flash
+    kernel in repro.kernels.flash_attention).
+    """
+    b, s, h, dh = q.shape
+    skv = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qs = q.reshape(b, s, hkv, g, dh)
+
+    chunk = min(chunk, skv)
+    n_chunks = skv // chunk
+    assert skv % chunk == 0, (skv, chunk)
+
+    k_c = k.reshape(b, n_chunks, chunk, hkv, dh)
+    v_c = v.reshape(b, n_chunks, chunk, hkv, dh)
+    kp_c = kv_positions.reshape(b, n_chunks, chunk)[0]  # positions are shared
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kc, vc, kpc = inputs  # (B, chunk, Hkv, Dh), (chunk,)
+        logits = (
+            jnp.einsum("bshgd,bchd->bshgc", qs, kc).astype(jnp.float32) * scale
+        )
+        mask = q_positions[:, :, None, None, None] >= kpc[None, None, None, None, :]
+        if window is not None:
+            mask &= (
+                q_positions[:, :, None, None, None]
+                - kpc[None, None, None, None, :]
+            ) < window
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bshgc,bchd->bshgd", p.astype(vc.dtype), vc
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, s, hkv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s, hkv, g), jnp.float32)
+    acc0 = jnp.zeros((b, s, hkv, g, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, acc0),
+        (
+            jnp.moveaxis(k_c, 1, 0),
+            jnp.moveaxis(v_c, 1, 0),
+            kp_c,
+        ),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, s, h, dh).astype(q.dtype)
+
+
+def attention_train(params, cfg, x, positions, window=None):
+    """Full training/prefill path. x: (B, S, D) -> (B, S, D)."""
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    # SP attention: shard q's sequence over the model axis (k/v stay full);
+    # the flash logits (B, S/tp, H, chunk) then shard with it.
+    q = shard(q, ("pod", "data"), "model", None, None)
+    if window is not None and cfg.local_attn_impl == "banded" and x.shape[1] % window == 0:
+        out = local_attention_banded(q, k, v, positions, window)
+    else:
+        out = flash_attention_jnp(
+            q, k, v, positions, positions, window=window, chunk=cfg.attn_chunk
+        )
+    return jnp.einsum(
+        "bshk,hkd->bsd", out, params["wo"].reshape(cfg.n_heads, cfg.head_dim_, -1)
+    )
+
+
+def local_attention_banded(q, k, v, positions, window: int):
+    """Exact sliding-window attention in O(S*2W): chunk the sequence at the
+    window size; each chunk attends to itself + the previous chunk.
+
+    This is the optimized path for local-attention layers (vs. the 'masked'
+    baseline that computes the full S^2 score matrix and masks it) — see
+    EXPERIMENTS.md §Perf.
+    """
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    w = window
+    assert s % w == 0, (s, w)
+    nc = s // w
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+
+    qc = q.reshape(b, nc, w, hkv, g, dh)
+    kc = k.reshape(b, nc, w, hkv, dh)
+    vc = v.reshape(b, nc, w, hkv, dh)
+    pc = positions.reshape(b, nc, w)
+    # previous chunk (zeros before the first)
+    prev = lambda a: jnp.concatenate([jnp.zeros_like(a[:, :1]), a[:, :-1]], axis=1)
+    k2 = jnp.concatenate([prev(kc), kc], axis=2)  # (B,nc,2w,hkv,dh)
+    v2 = jnp.concatenate([prev(vc), vc], axis=2)
+    # positions of k2 entries; the phantom chunk before c=0 is masked via -1
+    p2 = jnp.concatenate(
+        [jnp.where(jnp.arange(nc)[None, :, None] == 0, -1, pc - w), pc], axis=2
+    )
+
+    logits = (
+        jnp.einsum("bcqhgd,bckhd->bcqhgk", qc, k2).astype(jnp.float32) * scale
+    )
+    mask = (pc[:, :, :, None, None, None] >= p2[:, :, None, None, None, :]) & (
+        pc[:, :, :, None, None, None] - p2[:, :, None, None, None, :] < w
+    ) & (p2[:, :, None, None, None, :] >= 0)
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bcqhgk,bckhd->bcqhgd", p.astype(v2.dtype), v2)
+    return out.reshape(b, s, h, dh)
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Dict:
+    dh = cfg.head_dim_
+    cache = {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, dh), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, dh), dtype),
+    }
+    if cfg.mqr_incremental and max_len % cfg.mqr_block == 0:
+        nb = max_len // cfg.mqr_block
+        idx0 = kvindex.init_incremental(nb, cfg.mqr_block, cfg.mqr_levels)
+        bc = lambda a: jnp.broadcast_to(
+            a, (batch, cfg.n_kv_heads) + a.shape
+        )
+        cache["idx_block"] = bc(idx0.block_mbr)
+        cache["idx_group"] = bc(idx0.group_mbr)
+        cache["idx_gof"] = bc(idx0.group_of)
+    return cache
+
+
+def init_local_cache(cfg, batch: int, dtype) -> Dict:
+    """Ring buffer of window size for sliding-window layers."""
+    dh = cfg.head_dim_
+    w = cfg.local_window
+    return {
+        "k": jnp.zeros((batch, w, cfg.n_kv_heads, dh), dtype),
+        "v": jnp.zeros((batch, w, cfg.n_kv_heads, dh), dtype),
+        "pos": jnp.full((w,), -1, jnp.int32),
+    }
+
+
+def local_attention_decode(params, cfg, x, cache, pos):
+    """Single-token decode against the ring buffer. x: (B, 1, D)."""
+    b = x.shape[0]
+    dh = cfg.head_dim_
+    w = cache["k"].shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+
+    slot = jnp.mod(pos, w)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1
+    )
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1
+    )
+    kv_pos = cache["pos"].at[slot].set(pos)
+    new_cache = {"k": k_cache, "v": v_cache, "pos": kv_pos}
+
+    h = cfg.n_heads
+    hkv = cfg.n_kv_heads
+    g = h // hkv
+    qs = q.reshape(b, hkv, g, dh)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qs, k_cache).astype(jnp.float32)
+    logits = logits / jnp.sqrt(dh)
+    valid = (kv_pos >= 0) & (kv_pos <= pos) & (pos - kv_pos < w)
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache)
+    out = out.reshape(b, 1, h, dh)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].reshape(h, dh, -1))
+    return out, new_cache
+
+
+def attention_prefill(params, cfg, x, positions, window=None):
+    """Returns (out, cache-contents k/v) for subsequent decode."""
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    if window is not None and cfg.local_attn_impl == "banded" and x.shape[1] % window == 0:
+        out = local_attention_banded(q, k, v, positions, window)
+    else:
+        out = flash_attention_jnp(
+            q, k, v, positions, positions, window=window, chunk=cfg.attn_chunk
+        )
+    out = jnp.einsum(
+        "bshk,hkd->bsd",
+        out,
+        params["wo"].reshape(cfg.n_heads, cfg.head_dim_, -1),
+    )
+    return out, {"k": k, "v": v}
+
+
+def attention_decode(
+    params,
+    cfg,
+    x,
+    cache: Dict,
+    pos,  # scalar int32: current length (position of the new token)
+    window=None,
+    mqr_sparse: bool = False,
+):
+    """Single-token decode. x: (B, 1, D). Returns (out, new_cache)."""
+    b = x.shape[0]
+    dh = cfg.head_dim_
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    new_cache = dict(cache, k=k_cache, v=v_cache)
+
+    if mqr_sparse and "idx_block" in cache:
+        out, new_cache = _mqr_incremental_decode(
+            params, cfg, q, k_new, new_cache, pos
+        )
+    elif mqr_sparse:
+        out = _mqr_sparse_decode(params, cfg, q, k_cache, v_cache, pos)
+    else:
+        out = _dense_decode(cfg, q, k_cache, v_cache, pos, window)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].reshape(cfg.n_heads, dh, -1))
+    return out, new_cache
+
+
+def _dense_decode(cfg, q, k_cache, v_cache, pos, window):
+    b, _, h, dh = q.shape
+    skv = k_cache.shape[1]
+    hkv = cfg.n_kv_heads
+    g = h // hkv
+    qs = q.reshape(b, hkv, g, dh)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qs, k_cache).astype(jnp.float32)
+    logits = logits / jnp.sqrt(dh)
+    kv_pos = jnp.arange(skv)
+    mask = kv_pos[None, None, None, :] <= pos
+    if window is not None:
+        mask &= kv_pos[None, None, None, :] > pos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, dh)
+
+
+def _mqr_sparse_decode(params, cfg, q, k_cache, v_cache, pos):
+    """The paper's technique on the KV cache: region-search the mqr-KV index
+    and attend only over the selected blocks (DESIGN.md §3)."""
+    b, _, h, dh = q.shape
+    skv = k_cache.shape[1]
+    hkv = cfg.n_kv_heads
+    g = h // hkv
+    bs = cfg.mqr_block
+    nb = skv // bs
+    topk = min(cfg.mqr_topk, nb)
+    probe = params["probe"]  # (Hkv, Dh) fp32
+
+    kb = k_cache.reshape(b, nb, bs, hkv, dh)
+    vb = v_cache.reshape(b, nb, bs, hkv, dh)
+
+    def per_bh(k_bh, q_bh, probe_h):
+        # k_bh: (S, Dh) for one (batch, kv head); q_bh: (G, Dh)
+        idx = kvindex.build_kv_index(
+            k_bh.astype(jnp.float32), probe_h, bs, cfg.mqr_levels
+        )
+        regions = jax.vmap(
+            lambda qq: kvindex.query_region(qq.astype(jnp.float32), probe_h, pos + 1)
+        )(q_bh)
+        ids = jax.vmap(lambda r: kvindex.select_blocks(idx, r, topk))(regions)
+        return ids  # (G, topk)
+
+    k_flat = k_cache.reshape(b, skv, hkv, dh)
+    ids = jax.vmap(  # over batch
+        lambda kf, qf: jax.vmap(per_bh, in_axes=(1, 0, 0))(
+            kf, qf.reshape(hkv, g, dh), probe
+        )
+    )(k_flat, q[:, 0])
+    # ids: (B, Hkv, G, topk)
+
+    kg = _gather(kb, ids)  # (B, Hkv, G, topk, bs, Dh)
+    vg = _gather(vb, ids)
+
+    qs = q.reshape(b, hkv, g, dh)
+    logits = jnp.einsum("bhgd,bhgksd->bhgks", qs, kg).astype(jnp.float32)
+    logits = logits / jnp.sqrt(dh)
+    kv_pos = ids[..., None] * bs + jnp.arange(bs)[None, None, None, None, :]
+    mask = kv_pos <= pos
+    logits = jnp.where(mask, logits, NEG_INF)
+    shape = logits.shape
+    p = jax.nn.softmax(logits.reshape(*shape[:3], -1), axis=-1).reshape(shape)
+    out = jnp.einsum("bhgks,bhgksd->bhgd", p.astype(vg.dtype), vg)
+    return out.reshape(b, 1, h, dh)
+
+
+def _mqr_incremental_decode(params, cfg, q, k_new, cache, pos):
+    """Sparse decode against the cache-resident incremental index: the key
+    cache is only read for the K selected blocks (EXPERIMENTS.md §Perf)."""
+    b, _, h, dh = q.shape
+    k_cache, v_cache = cache["k"], cache["v"]
+    skv = k_cache.shape[1]
+    hkv = cfg.n_kv_heads
+    g = h // hkv
+    bs = cfg.mqr_block
+    nb = skv // bs
+    topk = min(cfg.mqr_topk, nb)
+    probe = params["probe"]  # (Hkv, Dh)
+
+    # 1. update the index with the new key's (pos, score) point
+    s_new = jnp.einsum("bhd,hd->bh", k_new[:, 0].astype(jnp.float32), probe)
+
+    def upd(idx_b, idx_g, idx_o, s_bh):
+        idx = kvindex.IncKVIndex(idx_b, idx_g, idx_o)
+        idx = kvindex.incremental_update(idx, pos, s_bh, bs)
+        return idx.block_mbr, idx.group_mbr
+
+    nb_, ng_ = jax.vmap(jax.vmap(upd))(
+        cache["idx_block"], cache["idx_group"], cache["idx_gof"], s_new
+    )
+    cache = dict(cache, idx_block=nb_, idx_group=ng_)
+
+    # 2. region search per query head (reads only the index arrays)
+    def per_bh(idx_b, idx_g, idx_o, q_bh, probe_h):
+        idx = kvindex.IncKVIndex(idx_b, idx_g, idx_o)
+        regions = jax.vmap(
+            lambda qq: kvindex.query_region(qq.astype(jnp.float32), probe_h, pos + 1)
+        )(q_bh)  # (G, 4)
+        return jax.vmap(
+            lambda r: kvindex.incremental_select(idx, r, topk)
+        )(regions)  # (G, topk)
+
+    ids = jax.vmap(  # batch
+        lambda ib, ig, io, qb: jax.vmap(per_bh, in_axes=(0, 0, 0, 0, 0))(
+            ib, ig, io, qb.reshape(hkv, g, dh), probe
+        )
+    )(cache["idx_block"], cache["idx_group"], cache["idx_gof"], q[:, 0])
+    # ids: (B, Hkv, G, topk)
+
+    # 3. gather only the selected blocks and attend
+    kb = k_cache.reshape(b, nb, bs, hkv, dh)
+    vb = v_cache.reshape(b, nb, bs, hkv, dh)
+    kg = _gather(kb, ids)
+    vg = _gather(vb, ids)
+    qs = q.reshape(b, hkv, g, dh)
+    logits = jnp.einsum("bhgd,bhgksd->bhgks", qs, kg).astype(jnp.float32)
+    logits = logits / jnp.sqrt(dh)
+    kv_pos = ids[..., None] * bs + jnp.arange(bs)[None, None, None, None, :]
+    logits = jnp.where(kv_pos <= pos, logits, NEG_INF)
+    shape = logits.shape
+    p = jax.nn.softmax(logits.reshape(*shape[:3], -1), axis=-1).reshape(shape)
+    out = jnp.einsum("bhgks,bhgksd->bhgd", p.astype(vg.dtype), vg)
+    return out.reshape(b, 1, h, dh), cache
+
+
+def _gather(blocks, ids):
+    """blocks: (B, nb, bs, Hkv, Dh); ids: (B, Hkv, G, topk)
+    -> (B, Hkv, G, topk, bs, Dh)"""
+    bt = blocks.transpose(0, 3, 1, 2, 4)  # (B, Hkv, nb, bs, Dh)
+
+    def per_b(bt_b, ids_b):  # (Hkv, nb, bs, Dh), (Hkv, G, topk)
+        def per_h(bt_h, ids_h):  # (nb, bs, Dh), (G, topk)
+            return bt_h[ids_h]  # (G, topk, bs, Dh)
+
+        return jax.vmap(per_h)(bt_b, ids_b)
+
+    return jax.vmap(per_b)(bt, ids)

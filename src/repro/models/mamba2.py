@@ -1,0 +1,179 @@
+"""Mamba-2 (SSD, state-space duality — arXiv:2405.21060) mixer.
+
+Chunked SSD algorithm: quadratic attention-like compute within chunks,
+linear state recurrence across chunks (lax.scan).  Decode is an O(1)
+recurrent state update.  All einsum-based so the MXU sees matmuls.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .modules import dense_init, rmsnorm, rmsnorm_init, shard
+
+
+def init_mamba2(key, cfg, d_model: int) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    d_inner = cfg.ssm_expand * d_model
+    nheads = d_inner // cfg.ssm_headdim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    conv_dim = d_inner + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "in_proj": dense_init(
+            ks[0], d_model, (2 * d_inner + 2 * g * n + nheads,), dt
+        ),
+        "conv_w": dense_init(ks[1], cfg.conv_kernel, (conv_dim,), dt) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads, dtype=jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm": rmsnorm_init(d_inner),
+        "out_proj": dense_init(ks[2], d_inner, (d_model,), dt),
+    }
+
+
+def _split_proj(cfg, d_model, zxbcdt):
+    d_inner = cfg.ssm_expand * d_model
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    nheads = d_inner // cfg.ssm_headdim
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * g * n], axis=-1)
+    return z, xbc, dt, d_inner, g, n, nheads
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d.  x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def mamba2_train(params, cfg, x, positions=None, chunk: int = 256):
+    """x: (B, S, D) -> (B, S, D) via chunked SSD."""
+    b, s, d_model = x.shape
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt, d_inner, g, n, nheads = _split_proj(cfg, d_model, zxbcdt)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xs, bs_, cs = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+    p = cfg.ssm_headdim
+    h = nheads
+    xs = xs.reshape(b, s, h, p)
+    xs = shard(xs, ("pod", "data"), None, "model", None)
+    bs_ = bs_.reshape(b, s, g, n)
+    cs = cs.reshape(b, s, g, n)
+    hg = h // g  # heads per group
+
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["A_log"])  # (H,) negative
+    da = dt_f * a  # (B,S,H) log-decay per step
+
+    chunk = min(chunk, s)
+    nc = s // chunk
+    assert s % chunk == 0
+    # Scan over chunks: only ONE chunk's quadratic term is ever live
+    # (memory ~ B*Q^2*H/tp instead of nc*that) — the SSD schedule.
+    xs_c = jnp.moveaxis(xs.reshape(b, nc, chunk, h, p), 1, 0)
+    b_c = jnp.moveaxis(bs_.reshape(b, nc, chunk, g, n), 1, 0)
+    c_c = jnp.moveaxis(cs.reshape(b, nc, chunk, g, n), 1, 0)
+    da_c = jnp.moveaxis(da.reshape(b, nc, chunk, h), 1, 0)
+    dt_c = jnp.moveaxis(dt_f.reshape(b, nc, chunk, h), 1, 0)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(hstate, inp):
+        xc, bc, cc, dac, dtc = inp  # (B,Q,H,P), (B,Q,G,N)x2, (B,Q,H)x2
+        xc = shard(xc, ("pod", "data"), None, "model", None)
+        cum = jnp.cumsum(dac, axis=1)  # (B,Q,H)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Qi,Qj,H)
+        # Mask in log space BEFORE exp: exp of +ve garbage above the
+        # diagonal would propagate NaN through the backward where.
+        seg = jnp.where(causal[None, :, :, None], seg, -jnp.inf)
+        decay = jnp.exp(seg)
+        b_h = bc[:, :, :, None, :].repeat(hg, axis=3).reshape(b, chunk, h, n)
+        c_h = cc[:, :, :, None, :].repeat(hg, axis=3).reshape(b, chunk, h, n)
+        b_h = shard(b_h, ("pod", "data"), None, "model", None)
+        c_h = shard(c_h, ("pod", "data"), None, "model", None)
+        # Intra-chunk (quadratic) term.
+        cb = jnp.einsum("bihn,bjhn->bhij", c_h, b_h)  # (B,H,Qi,Qj)
+        scores = cb * jnp.moveaxis(decay, -1, 1)
+        y_intra = jnp.einsum(
+            "bhij,bjh,bjhp->bihp",
+            scores.astype(jnp.float32),
+            dtc,
+            xc.astype(jnp.float32),
+        )
+        # Inter-chunk term from the entering state.
+        dfs = jnp.exp(cum)  # (B,Q,H)
+        y_inter = jnp.einsum(
+            "bihn,bhnp->bihp",
+            c_h.astype(jnp.float32) * dfs[..., None],
+            hstate,
+        )
+        # State update to the chunk end.
+        dte = jnp.exp(cum[:, -1:, :] - cum)  # (B,Q,H)
+        bx = jnp.einsum(
+            "bjhn,bjh,bjhp->bhnp",
+            b_h.astype(jnp.float32),
+            dte * dtc,
+            xc.astype(jnp.float32),
+        )
+        h_new = hstate * jnp.exp(cum[:, -1, :])[:, :, None, None] + bx
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    _, y_c = jax.lax.scan(body, h0, (xs_c, b_c, c_c, da_c, dt_c))
+    y = jnp.moveaxis(y_c, 0, 1).reshape(b, s, h, p)
+    y = y + xs * params["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, s, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+
+
+def init_mamba2_cache(cfg, batch: int, d_model: int, dtype) -> Dict:
+    d_inner = cfg.ssm_expand * d_model
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    nheads = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * g * n
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nheads, n, cfg.ssm_headdim), jnp.float32),
+    }
+
+
+def mamba2_decode(params, cfg, x, cache, pos=None):
+    """Single-token recurrent update. x: (B, 1, D)."""
+    b, _, d_model = x.shape
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt, d_inner, g, n, nheads = _split_proj(cfg, d_model, zxbcdt)
+    # conv over cached window
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, K, conv_dim)
+    conv_out = (
+        jnp.einsum("bkc,kc->bc", window, params["conv_w"]) + params["conv_b"]
+    )[:, None, :]
+    xbc = jax.nn.silu(conv_out)
+    xs, bs_, cs = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+    p = cfg.ssm_headdim
+    h = nheads
+    hg = h // g
+    xs = xs.reshape(b, h, p)
+    b_h = bs_.reshape(b, g, n)[:, :, None, :].repeat(hg, axis=2).reshape(b, h, n)
+    c_h = cs.reshape(b, g, n)[:, :, None, :].repeat(hg, axis=2).reshape(b, h, n)
+
+    dt_f = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt_f * a)  # (B,H)
+
+    ssm = cache["ssm"] * da[:, :, None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhnp", b_h.astype(jnp.float32), dt_f, xs.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", c_h.astype(jnp.float32), ssm).astype(x.dtype)
+    y = y + xs * params["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(b, 1, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    new_cache = {"conv": window[:, 1:, :], "ssm": ssm}
+    return out, new_cache

@@ -1,0 +1,177 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Train/prefill: project to a compressed KV latent ``c_kv`` (kv_lora_rank) plus
+a decoupled RoPE key ``k_rope`` shared across heads; expand per-head
+``k_nope, v`` from the latent.  Decode: *absorbed* form — queries are folded
+through the up-projections so attention runs directly against the cached
+latent, never materializing per-head K/V for the full context
+(DESIGN.md §3.2: the mqr-KV 2-D score axis lives on the latent).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvindex
+from .modules import apply_rope, dense_init, rmsnorm, rmsnorm_init, shard
+
+NEG_INF = -1e30
+
+
+def init_mla(key, cfg, d_model: int) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    qk_nope, qk_rope, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": dense_init(ks[0], d_model, (cfg.q_lora_rank,), dt),
+        "q_norm": rmsnorm_init(cfg.q_lora_rank),
+        "wq_b": dense_init(ks[1], cfg.q_lora_rank, (h, qk_nope + qk_rope), dt),
+        "wkv_a": dense_init(ks[2], d_model, (cfg.kv_lora_rank + qk_rope,), dt),
+        "kv_norm": rmsnorm_init(cfg.kv_lora_rank),
+        "wk_b": dense_init(ks[3], cfg.kv_lora_rank, (h, qk_nope), dt),
+        "wv_b": dense_init(ks[4], cfg.kv_lora_rank, (h, dv), dt),
+        "wo": dense_init(ks[5], h * dv, (d_model,), dt),
+        "probe": dense_init(ks[6], cfg.kv_lora_rank, (1,), jnp.float32)[:, 0],
+    }
+
+
+def _latent(params, cfg, x, positions):
+    """Compressed path shared by train/prefill/decode-append."""
+    kv_a = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_kv, k_rope = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(params["kv_norm"], c_kv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)  # (B,S,rope_dim)
+    return c_kv, k_rope
+
+
+def _queries(params, cfg, x, positions):
+    q_a = rmsnorm(
+        params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["wq_a"]), cfg.norm_eps
+    )
+    q = jnp.einsum("bsr,rhk->bshk", q_a, params["wq_b"])
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_train(params, cfg, x, positions, chunk: int = 1024):
+    """Training/prefill forward: expands K/V per head, flash-style scan."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    c_kv, k_rope = _latent(params, cfg, x, positions)
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    q_nope = shard(q_nope, ("pod", "data"), "model", None, None)
+    q_rope = shard(q_rope, ("pod", "data"), "model", None, None)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["wv_b"])
+
+    scale = 1.0 / jnp.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+
+    kn_c = jnp.moveaxis(k_nope.reshape(b, n_chunks, chunk, h, -1), 1, 0)
+    kr_c = jnp.moveaxis(k_rope.reshape(b, n_chunks, chunk, -1), 1, 0)
+    v_c = jnp.moveaxis(v.reshape(b, n_chunks, chunk, h, -1), 1, 0)
+    kp_c = positions.reshape(b, n_chunks, chunk)[0]
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kn, kr, vc, kp = inputs
+        logits = (
+            jnp.einsum("bshk,bchk->bshc", q_nope, kn)
+            + jnp.einsum("bshk,bck->bshc", q_rope, kr)
+        ).astype(jnp.float32) * scale
+        mask = positions[:, :, None, None] >= kp[None, None, None, :]
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bshc,bchk->bshk", p.astype(vc.dtype), vc
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, s, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s, h), jnp.float32)
+    acc0 = jnp.zeros((b, s, h, cfg.v_head_dim), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kn_c, kr_c, v_c, kp_c))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].reshape(h, cfg.v_head_dim, -1))
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype) -> Dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(params, cfg, x, cache, pos, mqr_sparse: bool = False):
+    """Absorbed-latent single-token decode. x: (B, 1, D)."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    c_new, kr_new = _latent(params, cfg, x, positions)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1
+    )
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1
+    )
+    new_cache = {"c_kv": c_cache, "k_rope": kr_cache}
+
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    # Absorb the key up-projection into the query: (B,1,H,rank)
+    q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"])
+
+    scale = 1.0 / jnp.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    skv = c_cache.shape[1]
+    kv_pos = jnp.arange(skv)
+
+    if mqr_sparse:
+        bs = cfg.mqr_block
+        nb = skv // bs
+        topk = min(cfg.mqr_topk, nb)
+        probe = params["probe"]
+
+        def per_b(c_b, qe_b):
+            idx = kvindex.build_kv_index(c_b.astype(jnp.float32), probe, bs, cfg.mqr_levels)
+            regions = jax.vmap(
+                lambda qq: kvindex.query_region(qq.astype(jnp.float32), probe, pos + 1)
+            )(qe_b)  # (H, 4)
+            return jax.vmap(lambda r: kvindex.select_blocks(idx, r, topk))(regions)
+
+        ids = jax.vmap(per_b)(c_cache, q_eff[:, 0])  # (B, H, topk)
+        cb = c_cache.reshape(b, nb, bs, -1)
+        krb = kr_cache.reshape(b, nb, bs, -1)
+        cg = jax.vmap(lambda cb_b, ids_b: cb_b[ids_b])(cb, ids)   # (B,H,topk,bs,rank)
+        krg = jax.vmap(lambda kb_b, ids_b: kb_b[ids_b])(krb, ids)
+        logits = (
+            jnp.einsum("bshr,bhksr->bhks", q_eff, cg)
+            + jnp.einsum("bshk,bhcsk->bhcs", q_rope, krg)
+        ).astype(jnp.float32) * scale
+        sel_pos = ids[..., None] * bs + jnp.arange(bs)[None, None, None, :]
+        logits = jnp.where(sel_pos <= pos, logits, NEG_INF)
+        p = jax.nn.softmax(logits.reshape(b, h, -1), axis=-1).reshape(logits.shape)
+        attn_c = jnp.einsum("bhks,bhksr->bhr", p.astype(cg.dtype), cg)
+    else:
+        logits = (
+            jnp.einsum("bshr,btr->bsht", q_eff, c_cache)[:, 0]
+            + jnp.einsum("bshk,btk->bsht", q_rope, kr_cache)[:, 0]
+        ).astype(jnp.float32) * scale  # (B, H, skv)
+        logits = jnp.where(kv_pos[None, None, :] <= pos, logits, NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1)
+        attn_c = jnp.einsum("bht,btr->bhr", p.astype(c_cache.dtype), c_cache)
+
+    # Expand through the value up-projection, then output proj.
+    out = jnp.einsum("bhr,rhk->bhk", attn_c, params["wv_b"])
+    out = out.reshape(b, 1, h, cfg.v_head_dim)
+    return (
+        jnp.einsum("bshk,hkd->bsd", out, params["wo"].reshape(h, cfg.v_head_dim, -1)),
+        new_cache,
+    )

@@ -1,0 +1,139 @@
+"""Minimal functional module system (no flax in this environment).
+
+Parameters are nested dicts of jnp arrays.  Each "module" is a pair of
+functions: ``init_*(key, ...) -> params`` and an apply function taking
+``(params, x, ...)``.  Initializers follow standard LM practice
+(truncated-normal fan-in scaling).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def param_dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, in_dim: int, out_shape, dtype=jnp.bfloat16, scale: float = 1.0):
+    """Weight of shape (in_dim, *out_shape), fan-in scaled normal."""
+    shape = (in_dim,) + tuple(out_shape)
+    std = scale / math.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.bfloat16):
+    # 1/sqrt(dim) scale keeps tied-head logits O(1); input-side models that
+    # expect unit-scale embeddings (gemma family) multiply by sqrt(dim).
+    std = dim ** -0.5
+    return (
+        jax.random.truncated_normal(key, -2.0, 2.0, (vocab, dim), jnp.float32) * std
+    ).astype(dtype)
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    # Norm scales stay fp32: they are tiny and precision-critical.
+    return jnp.ones((dim,), dtype)
+
+
+def rmsnorm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def act_fn(kind: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[kind]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, Dh) or (..., S, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == ang.ndim + 1:  # (..., S, H, Dh): broadcast over heads
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sharding helper: constraint that degrades to a no-op without a mesh.
+# ---------------------------------------------------------------------------
+
+
+def _active_mesh_axes():
+    """Axis names of the mesh in scope (with mesh: ...), or empty set."""
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and m.axis_names:
+            return set(m.axis_names), dict(zip(m.axis_names, m.devices.shape))
+    except Exception:
+        pass
+    return set(), {}
+
+
+def shard(x: jnp.ndarray, *spec) -> jnp.ndarray:
+    """Sharding constraint that adapts to the active mesh: axis names not in
+    the mesh are dropped (single-pod has no "pod" axis), non-divisible dims
+    fall back to replication, and without a mesh this is a no-op."""
+    from jax.sharding import PartitionSpec as P
+
+    axes, sizes = _active_mesh_axes()
+    if not axes:
+        return x
+    clean = []
+    for i, s in enumerate(spec):
+        names = s if isinstance(s, (tuple, list)) else (s,)
+        kept = tuple(a for a in names if a is not None and a in axes)
+        total = 1
+        for a in kept:
+            total *= sizes[a]
+        if not kept or x.shape[i] % total != 0:
+            clean.append(None)
+        elif len(kept) == 1:
+            clean.append(kept[0])
+        else:
+            clean.append(kept)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*clean))
+    except Exception:
+        return x
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+        tree,
+    )
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity-based
+dispatch (GShard-style einsum dispatch — the GSPMD/TPU-idiomatic form; the
+expert dimension shards over the ``model`` mesh axis, so dispatch/combine
+lower to all-to-all collectives).
+
+Supports DeepSeek-V3 flavour: sigmoid router scores with aux-free bias,
+shared experts alongside routed ones, and granite-moe flavour (softmax
+top-k).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .modules import act_fn, dense_init, shard
+
+
+def init_moe(key, cfg, d_model: int) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    e, f = cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 6)
+    params = {
+        "router": dense_init(ks[0], d_model, (e,), jnp.float32),
+        "router_bias": jnp.zeros((e,), jnp.float32),  # aux-loss-free bias
+        "w_in": dense_init(ks[1], d_model, (e, f), dt).transpose(1, 0, 2),
+        "w_gate": dense_init(ks[2], d_model, (e, f), dt).transpose(1, 0, 2),
+        "w_out": dense_init(ks[3], f, (e, d_model), dt).transpose(1, 0, 2),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        params["shared"] = {
+            "w_in": dense_init(ks[4], d_model, (fs,), dt),
+            "w_gate": dense_init(jax.random.fold_in(ks[4], 1), d_model, (fs,), dt),
+            "w_out": dense_init(ks[5], fs, (d_model,), dt),
+        }
+    return params
+
+
+def moe_ffn(params, cfg, x, capacity_factor: float = None):
+    """x: (B, S, D) -> (B, S, D).
+
+    Dispatch: (tokens, experts*capacity) one-hot einsum.  Capacity is
+    static: C = ceil(S*topk/E * factor) per batch row.
+    """
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_tok
+    act = act_fn(cfg.act)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    if cfg.router_kind == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        sel_scores = scores + params["router_bias"][None, None, :]
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+        sel_scores = scores
+
+    top_vals, top_idx = jax.lax.top_k(sel_scores, k)  # (B, S, k)
+    # Combine weights use the *unbiased* scores of the selected experts.
+    gate = jnp.take_along_axis(scores, top_idx, axis=-1)
+    if cfg.router_kind == "sigmoid":
+        gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(s * k / e * capacity_factor))
+
+    # Position of each (token, choice) within its expert queue.
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.int32)  # (B,S,k,E)
+    pos_in_expert = (
+        jnp.cumsum(onehot.reshape(b, s * k, e), axis=1).reshape(b, s, k, e) * onehot
+        - onehot
+    )
+    keep = (pos_in_expert < capacity) & (onehot > 0)
+    slot = jnp.clip(pos_in_expert, 0, capacity - 1)
+
+    if cfg.moe_dispatch == "scatter":
+        # Optimized path (EXPERIMENTS.md §Perf): route tokens with
+        # scatter-add / gather instead of the (tokens x E*C) dispatch
+        # matmuls — removes the GShard dispatch FLOPs entirely.
+        slot_tc = jnp.take_along_axis(slot, top_idx[..., None], axis=-1)[..., 0]
+        keep_tc = jnp.take_along_axis(keep, top_idx[..., None], axis=-1)[..., 0]
+        dest = jnp.where(keep_tc, top_idx * capacity + slot_tc, e * capacity)
+        dest = dest.reshape(b, s * k)  # (B, S*k)
+        x_rep = jnp.repeat(x, k, axis=1)  # (B, S*k, D)
+
+        def scatter_b(dest_b, xr_b):
+            buf = jnp.zeros((e * capacity + 1, d), x.dtype)
+            return buf.at[dest_b].add(xr_b)[: e * capacity]
+
+        xe = jax.vmap(scatter_b)(dest, x_rep).reshape(b, e, capacity, d)
+        xe = shard(xe, ("pod", "data"), "model", None, None)
+        hidden = act(jnp.einsum("becd,edf->becf", xe, params["w_gate"])) * jnp.einsum(
+            "becd,edf->becf", xe, params["w_in"]
+        )
+        ye = jnp.einsum("becf,efd->becd", hidden, params["w_out"])
+        ye = shard(ye, ("pod", "data"), "model", None, None)
+        ye_flat = jnp.concatenate(
+            [ye.reshape(b, e * capacity, d), jnp.zeros((b, 1, d), ye.dtype)], axis=1
+        )
+
+        def gather_b(dest_b, ye_b):
+            return ye_b[dest_b]  # (S*k, D)
+
+        y_tc = jax.vmap(gather_b)(dest, ye_flat).reshape(b, s, k, d)
+        y = jnp.einsum(
+            "bsk,bskd->bsd",
+            (gate * keep_tc).astype(y_tc.dtype),
+            y_tc,
+        )
+    else:
+        # GShard einsum dispatch (paper-era baseline): one-hot matmuls, bf16
+        # so they hit the MXU; lowers to all-to-all under EP sharding.
+        disp = (
+            (keep[..., None] & (slot[..., None] == jnp.arange(capacity)))
+            .any(axis=2)
+            .astype(x.dtype)
+        )  # (B, S, E, C)
+        comb = jnp.einsum(
+            "bsk,bske,bsec->bsec",
+            gate.astype(jnp.float32),
+            keep.astype(jnp.float32),
+            disp.astype(jnp.float32),
+        ).astype(x.dtype)
+
+        xe = jnp.einsum("bsd,bsec->becd", x, disp)  # all-to-all under EP
+        xe = shard(xe, ("pod", "data"), "model", None, None)
+        hidden = act(
+            jnp.einsum("becd,edf->becf", xe, params["w_gate"])
+        ) * jnp.einsum("becd,edf->becf", xe, params["w_in"])
+        ye = jnp.einsum("becf,efd->becd", hidden, params["w_out"])
+        ye = shard(ye, ("pod", "data"), "model", None, None)
+        y = jnp.einsum("becd,bsec->bsd", ye, comb)
+
+    if cfg.n_shared_experts:
+        sp = params["shared"]
+        y = y + jnp.einsum(
+            "bsf,fd->bsd",
+            act(jnp.einsum("bsd,df->bsf", x, sp["w_gate"]))
+            * jnp.einsum("bsd,df->bsf", x, sp["w_in"]),
+            sp["w_out"],
+        )
+
+    # Router statistics for the aux-free bias update (returned via aux).
+    load = keep.any(2).astype(jnp.float32).mean(axis=(0, 1))  # (E,) fraction routed
+    return y, {"expert_load": load}

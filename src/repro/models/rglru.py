@@ -1,0 +1,102 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Real-gated linear recurrent unit:
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``lax.associative_scan`` (log-depth parallel scan — the
+TPU-friendly schedule); decode is an O(1) state update.  The full
+RecurrentGemma recurrent block wraps the RG-LRU with a linear in-proj,
+short causal conv, GeLU gate branch, and out-proj.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .modules import dense_init
+
+_C = 8.0
+
+
+def init_rglru(key, cfg, d_model: int) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    w = cfg.lru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": dense_init(ks[0], d_model, (w,), dt),
+        "in_gate": dense_init(ks[1], d_model, (w,), dt),
+        "conv_w": dense_init(ks[2], cfg.conv_kernel, (w,), dt) * 0.1,
+        "conv_b": jnp.zeros((w,), dt),
+        "w_a": dense_init(ks[3], w, (w,), dt),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": dense_init(ks[4], w, (w,), dt),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.log(jnp.expm1(jnp.linspace(0.9, 0.999, w))) * 0 + 0.5,
+        "out": dense_init(ks[5], w, (d_model,), dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _gates(params, u):
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, params["w_a"]).astype(jnp.float32)
+        + params["b_a"]
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, params["w_i"]).astype(jnp.float32)
+        + params["b_i"]
+    )
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r  # (B,S,W), <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12))
+    return a, beta * i * u.astype(jnp.float32)
+
+
+def rglru_train(params, cfg, x, positions=None):
+    """x: (B, S, D) -> (B, S, D)."""
+    u = jnp.einsum("bsd,dw->bsw", x, params["in_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["in_gate"]))
+    u = _causal_conv(u, params["conv_w"], params["conv_b"])
+    a, b = _gates(params, u)
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    y = (h.astype(x.dtype)) * gate
+    return jnp.einsum("bsw,wd->bsd", y, params["out"])
+
+
+def init_rglru_cache(cfg, batch: int, dtype) -> Dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.lru_width), dtype),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }
+
+
+def rglru_decode(params, cfg, x, cache, pos=None):
+    u = jnp.einsum("bsd,dw->bsw", x, params["in_x"])  # (B,1,W)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["in_gate"]))
+    window = jnp.concatenate([cache["conv"], u], axis=1)
+    u = (jnp.einsum("bkw,kw->bw", window, params["conv_w"]) + params["conv_b"])[
+        :, None, :
+    ]
+    a, b = _gates(params, u)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    y = h[:, None, :].astype(x.dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, params["out"])
+    return out, {"conv": window[:, 1:, :], "h": h}

@@ -1,0 +1,618 @@
+"""Composable decoder-only LM covering all ten assigned architectures.
+
+A model is a stack of *superblocks*; each superblock applies the layer
+pattern ``cfg.block_pattern`` (e.g. ``("attn",)`` for llama,
+``("rglru", "rglru", "local")`` for RecurrentGemma, ``("mamba2",)`` for
+Mamba-2).  Each pattern entry is mixer + FFN with pre-RMSNorm residuals.
+Superblocks are parameter-stacked and executed with ``jax.lax.scan``
+(+ optional remat), so the HLO is O(1) in depth.
+
+Three execution paths: ``loss_and_aux`` (training), ``prefill``
+(inference-prefill, returns caches), ``decode_step`` (single token with
+caches; optionally the mqr-KV sparse path — the paper's technique).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mamba2 as m2
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import rglru as rg
+from .modules import (
+    Params,
+    act_fn,
+    dense_init,
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+    shard,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    block_pattern: Tuple[str, ...] = ("attn",)
+    tail_pattern: Tuple[str, ...] = ()  # trailing layers when n_layers % pattern != 0
+    ffn_kind: str = "swiglu"  # swiglu | geglu | mlp_gelu | moe | none
+    act: str = "silu"
+    # MoE
+    n_experts: int = 0
+    experts_per_tok: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    n_dense_layers: int = 0  # leading layers with dense FFN (DeepSeek)
+    router_kind: str = "softmax"  # softmax | sigmoid
+    moe_capacity_factor: float = 1.25
+    moe_dispatch: str = "einsum"  # einsum (GShard baseline) | scatter (optimized)
+    # MLA
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    mtp_depth: int = 0  # multi-token-prediction heads (DeepSeek-V3)
+    # Mamba-2
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    conv_kernel: int = 4
+    ssd_chunk: int = 256
+    # RG-LRU
+    lru_width: int = 0
+    local_window: int = 0
+    local_attn_impl: str = "banded"  # banded | masked (perf baseline)
+    # misc
+    norm_eps: float = 1e-6
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "full"  # full (nothing saveable) | dots (save matmuls)
+    attn_chunk: int = 1024
+    # frontends (stubs per assignment: precomputed embeddings/codebooks)
+    frontend: str = "none"  # none | audio_codebooks | vision_patches
+    n_codebooks: int = 0
+    n_patches: int = 0
+    # mqr-KV sparse attention (the paper's technique)
+    mqr_block: int = 128
+    mqr_topk: int = 64
+    mqr_levels: int = 6
+    mqr_incremental: bool = False  # index lives in the cache (see §Perf)
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """LM-head vocab padded to 256 so it shards over the model axis
+        (standard practice; pad ids are masked at serve time)."""
+        return (self.vocab_size + 255) // 256 * 256
+
+    @property
+    def n_superblocks(self) -> int:
+        body = self.n_layers - len(self.tail_pattern)
+        assert body % len(self.block_pattern) == 0, (self.n_layers, self.block_pattern)
+        return body // len(self.block_pattern)
+
+    def param_count(self) -> int:
+        """Analytic total parameter count N (for 6·N·D roofline)."""
+        d = self.d_model
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        if self.frontend == "audio_codebooks":
+            total += self.n_codebooks * self.vocab_size * d  # heads
+        per_pattern = 0
+        for kind in self.block_pattern:
+            per_pattern += self._mixer_params(kind)
+        n_super = self.n_superblocks
+        total += n_super * per_pattern
+        for kind in self.tail_pattern:
+            total += self._mixer_params(kind)
+        # ffn per layer
+        for li in range(self.n_layers):
+            total += self._ffn_params(li)
+        total += self.n_layers * 2 * d  # norms
+        return total
+
+    def _mixer_params(self, kind: str) -> int:
+        d, dh = self.d_model, self.head_dim_
+        if kind in ("attn", "local"):
+            return d * dh * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * dh * d
+        if kind == "mla":
+            r, rk = self.q_lora_rank, self.kv_lora_rank
+            qk = self.qk_nope_head_dim + self.qk_rope_head_dim
+            return (
+                d * r
+                + r * self.n_heads * qk
+                + d * (rk + self.qk_rope_head_dim)
+                + rk * self.n_heads * (self.qk_nope_head_dim + self.v_head_dim)
+                + self.n_heads * self.v_head_dim * d
+            )
+        if kind == "mamba2":
+            d_inner = self.ssm_expand * d
+            gn = self.ssm_ngroups * self.ssm_state
+            nheads = d_inner // self.ssm_headdim
+            return d * (2 * d_inner + 2 * gn + nheads) + d_inner * d
+        if kind == "rglru":
+            w = self.lru_width
+            return 2 * d * w + 2 * w * w + w * d
+        raise ValueError(kind)
+
+    def _ffn_params(self, layer_idx: int) -> int:
+        d = self.d_model
+        if self.ffn_kind == "none":
+            return 0
+        if self.ffn_kind == "moe" and layer_idx >= self.n_dense_layers:
+            e, f = self.n_experts, self.moe_d_ff
+            shared = 3 * d * self.moe_d_ff * self.n_shared_experts
+            return e * 3 * d * f + d * e + shared
+        f = self.d_ff
+        if self.ffn_kind == "mlp_gelu":
+            return 2 * d * f
+        return 3 * d * f
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top-k + shared only)."""
+        if self.ffn_kind != "moe":
+            return self.param_count()
+        total = self.param_count()
+        e, k = self.n_experts, self.experts_per_tok
+        inactive_layers = self.n_layers - self.n_dense_layers
+        inactive = inactive_layers * (e - k) * 3 * self.d_model * self.moe_d_ff
+        return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_mixer(key, cfg, kind: str) -> Params:
+    if kind in ("attn", "local"):
+        return attn.init_attention(key, cfg, cfg.d_model)
+    if kind == "mla":
+        return mla_mod.init_mla(key, cfg, cfg.d_model)
+    if kind == "mamba2":
+        return m2.init_mamba2(key, cfg, cfg.d_model)
+    if kind == "rglru":
+        return rg.init_rglru(key, cfg, cfg.d_model)
+    raise ValueError(kind)
+
+
+def _init_ffn(key, cfg, moe_layer: bool) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    if cfg.ffn_kind == "none":
+        return {}
+    if moe_layer:
+        return moe_mod.init_moe(key, cfg, d)
+    f = cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_kind == "mlp_gelu":
+        return {
+            "w_in": dense_init(ks[0], d, (f,), dt),
+            "w_out": dense_init(ks[1], f, (d,), dt),
+        }
+    return {
+        "w_gate": dense_init(ks[0], d, (f,), dt),
+        "w_in": dense_init(ks[1], d, (f,), dt),
+        "w_out": dense_init(ks[2], f, (d,), dt),
+    }
+
+
+def _init_superblock(key, cfg, moe_flags, pattern=None) -> Params:
+    """One superblock: pattern of (mixer + ffn) layers.
+
+    moe_flags: tuple of bool per pattern entry — whether the FFN is MoE.
+    """
+    out = {}
+    pattern = pattern or cfg.block_pattern
+    for i, kind in enumerate(pattern):
+        k1, k2, key = jax.random.split(key, 3)
+        out[f"l{i}"] = {
+            "mixer_norm": rmsnorm_init(cfg.d_model),
+            "mixer": _init_mixer(k1, cfg, kind),
+            "ffn_norm": rmsnorm_init(cfg.d_model),
+            "ffn": _init_ffn(k2, cfg, moe_flags[i]),
+        }
+    return out
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: Params = {}
+    vpad = cfg.padded_vocab
+    if cfg.frontend == "audio_codebooks":
+        params["embed"] = jax.vmap(
+            lambda k: embed_init(k, vpad, cfg.d_model, dt)
+        )(jax.random.split(keys[0], cfg.n_codebooks))
+        params["lm_head"] = jax.vmap(
+            lambda k: dense_init(k, cfg.d_model, (vpad,), dt)
+        )(jax.random.split(keys[1], cfg.n_codebooks))
+    else:
+        params["embed"] = embed_init(keys[0], vpad, cfg.d_model, dt)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(keys[1], cfg.d_model, (vpad,), dt)
+    params["final_norm"] = rmsnorm_init(cfg.d_model)
+
+    p_len = len(cfg.block_pattern)
+    n_super = cfg.n_superblocks
+    moe = cfg.ffn_kind == "moe"
+
+    if moe and cfg.n_dense_layers:
+        # Two homogeneous stacks (e.g. DeepSeek: first k layers dense FFN).
+        assert p_len == 1, "n_dense_layers requires a single-entry pattern"
+        nd = cfg.n_dense_layers
+        dense_keys = jax.random.split(keys[2], nd)
+        moe_keys = jax.random.split(keys[3], cfg.n_layers - nd)
+        params["blocks_dense"] = jax.vmap(
+            lambda k: _init_superblock(k, cfg, (False,))
+        )(dense_keys)
+        params["blocks"] = jax.vmap(lambda k: _init_superblock(k, cfg, (True,)))(
+            moe_keys
+        )
+    else:
+        flags = tuple(moe for _ in range(p_len))
+        params["blocks"] = jax.vmap(lambda k: _init_superblock(k, cfg, flags))(
+            jax.random.split(keys[2], n_super)
+        )
+    if cfg.tail_pattern:
+        tflags = tuple(moe for _ in cfg.tail_pattern)
+        params["tail"] = _init_superblock(keys[5], cfg, tflags, cfg.tail_pattern)
+    if cfg.mtp_depth:
+        # DeepSeek-V3 MTP: one extra transformer block + projection per depth.
+        mk = jax.random.split(keys[4], cfg.mtp_depth)
+        params["mtp"] = jax.vmap(
+            lambda k: {
+                "proj": dense_init(k, 2 * cfg.d_model, (cfg.d_model,), dt),
+                "block": _init_superblock(
+                    jax.random.fold_in(k, 1), cfg, (cfg.ffn_kind == "moe",)
+                ),
+            }
+        )(mk)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _ffn_apply(p, cfg, x, moe_layer: bool):
+    if cfg.ffn_kind == "none":
+        return x * 0.0, None
+    if moe_layer:
+        return moe_mod.moe_ffn(p, cfg, x)
+    act = act_fn(cfg.act)
+    if cfg.ffn_kind == "mlp_gelu":
+        h = act(jnp.einsum("bsd,df->bsf", x, p["w_in"]))
+        return jnp.einsum("bsf,fd->bsd", h, p["w_out"]), None
+    h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * jnp.einsum(
+        "bsd,df->bsf", x, p["w_in"]
+    )
+    h = shard(h, ("pod", "data"), None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"]), None
+
+
+def _mixer_apply_train(p, cfg, kind, x, positions):
+    if kind == "attn":
+        return attn.attention_train(p, cfg, x, positions)
+    if kind == "local":
+        return attn.attention_train(p, cfg, x, positions, window=cfg.local_window)
+    if kind == "mla":
+        return mla_mod.mla_train(p, cfg, x, positions, chunk=cfg.attn_chunk)
+    if kind == "mamba2":
+        return m2.mamba2_train(p, cfg, x, positions, chunk=cfg.ssd_chunk)
+    if kind == "rglru":
+        return rg.rglru_train(p, cfg, x, positions)
+    raise ValueError(kind)
+
+
+def _superblock_train(block_params, cfg, x, positions, moe_flags, pattern=None):
+    aux_load = None
+    for i, kind in enumerate(pattern or cfg.block_pattern):
+        lp = block_params[f"l{i}"]
+        h = rmsnorm(lp["mixer_norm"], x, cfg.norm_eps)
+        x = x + _mixer_apply_train(lp["mixer"], cfg, kind, h, positions)
+        h = rmsnorm(lp["ffn_norm"], x, cfg.norm_eps)
+        y, aux = _ffn_apply(lp["ffn"], cfg, h, moe_flags[i])
+        x = x + y
+        if aux is not None:
+            aux_load = aux["expert_load"] if aux_load is None else aux_load + aux["expert_load"]
+    return x, aux_load
+
+
+def _stack_scan(params_stack, cfg, x, positions, moe_flags):
+    """Scan superblocks with optional remat."""
+
+    def body(carry, block_params):
+        h, load = carry
+        # Sequence parallelism: the residual carry (the only activation saved
+        # by remat per layer) shards its sequence dim over the model axis;
+        # attention/FFN internals gather/scatter as needed (Megatron-SP).
+        if h.shape[1] % 2048 == 0:
+            h = shard(h, ("pod", "data"), "model", None)
+        h2, aux_load = _superblock_train(block_params, cfg, h, positions, moe_flags)
+        if aux_load is not None:
+            load = load + aux_load
+        return (h2, load), None
+
+    if cfg.remat:
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat_policy == "dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        body = jax.checkpoint(body, policy=policy)
+    e = cfg.n_experts if cfg.ffn_kind == "moe" else 1
+    (x, load), _ = jax.lax.scan(body, (x, jnp.zeros((e,), jnp.float32)), params_stack)
+    return x, load
+
+
+def embed_inputs(params, cfg, batch: Dict[str, jnp.ndarray]):
+    """Returns (hidden (B,S,D), positions (B,S), loss_mask (B,S))."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio_codebooks":
+        tokens = batch["tokens"]  # (B, S, K)
+        emb = params["embed"]  # (K, V, D)
+        x = jnp.sum(
+            jnp.take_along_axis(
+                emb[None], tokens.transpose(0, 2, 1)[..., None], axis=2
+            ),
+            axis=1,
+        )
+        b, s = tokens.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        return x.astype(dt), positions, jnp.ones((b, s), bool)
+    if cfg.frontend == "vision_patches":
+        tokens = batch["tokens"]  # (B, S_txt)
+        vis = batch["vision_embeds"].astype(dt)  # (B, P, D)
+        tx = params["embed"][tokens].astype(dt)
+        x = jnp.concatenate([vis, tx], axis=1)
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        mask = jnp.concatenate(
+            [jnp.zeros((b, vis.shape[1]), bool), jnp.ones(tokens.shape, bool)], axis=1
+        )
+        return x, positions, mask
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(dt)
+    if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
+        x = x * jnp.sqrt(cfg.d_model).astype(dt)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return x, positions, jnp.ones((b, s), bool)
+
+
+def forward_hidden(params, cfg, x, positions):
+    """Hidden trunk shared by train/prefill."""
+    x = shard(x, ("pod", "data"), None, None)
+    moe = cfg.ffn_kind == "moe"
+    if moe and cfg.n_dense_layers:
+        x, _ = _stack_scan(params["blocks_dense"], cfg, x, positions, (False,))
+        x, load = _stack_scan(params["blocks"], cfg, x, positions, (True,))
+    else:
+        flags = tuple(moe for _ in cfg.block_pattern)
+        x, load = _stack_scan(params["blocks"], cfg, x, positions, flags)
+    if cfg.tail_pattern:
+        tflags = tuple(moe for _ in cfg.tail_pattern)
+        tail_fn = lambda p, h: _superblock_train(
+            p, cfg, h, positions, tflags, cfg.tail_pattern
+        )
+        if cfg.remat:
+            policy = (
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                if cfg.remat_policy == "dots"
+                else jax.checkpoint_policies.nothing_saveable
+            )
+            tail_fn = jax.checkpoint(tail_fn, policy=policy)
+        x, _ = tail_fn(params["tail"], x)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, load
+
+
+def logits_fn(params, cfg, hidden):
+    if cfg.frontend == "audio_codebooks":
+        out = jnp.einsum("bsd,kdv->bskv", hidden, params["lm_head"])
+        return shard(out, ("pod", "data"), None, None, "model")
+    w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if cfg.tie_embeddings:
+        out = jnp.einsum("bsd,vd->bsv", hidden, w)
+    else:
+        out = jnp.einsum("bsd,dv->bsv", hidden, w)
+    # vocab over the model axis, batch over data axes: the CE block
+    # (one-hot, logsumexp, dlogits) stays fully sharded.
+    return shard(out, ("pod", "data"), None, "model")
+
+
+def loss_and_aux(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    """Next-token cross-entropy (+ MoE load stats).  batch['labels'] aligns
+    with batch['tokens'] shifted by the caller (data pipeline)."""
+    x, positions, mask = embed_inputs(params, cfg, batch)
+    hidden, load = forward_hidden(params, cfg, x, positions)
+    logits = logits_fn(params, cfg, hidden).astype(jnp.float32)
+    labels = batch["labels"]
+    if cfg.frontend == "vision_patches":
+        # prepend ignore labels for patch positions
+        b, p = labels.shape[0], cfg.n_patches
+        labels = jnp.concatenate(
+            [jnp.full((b, p), -1, labels.dtype), labels], axis=1
+        )
+    labels_c = jnp.clip(labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    # one-hot reduction instead of take_along_axis: reduces over the
+    # (model-axis sharded) vocab dim without gathering the logits.
+    v = logits.shape[-1]
+    onehot = jax.nn.one_hot(labels_c, v, dtype=logits.dtype)
+    ll = jnp.sum(logits * onehot, axis=-1)
+    if cfg.frontend == "audio_codebooks":
+        # labels: (B, S, K); logits: (B, S, K, V)
+        nll = (logz - ll).mean(axis=-1)  # mean over codebooks
+        valid = mask & (labels >= 0).all(axis=-1)
+    else:
+        nll = logz - ll
+        valid = mask & (labels >= 0)
+    loss = jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1)
+    return loss, {"expert_load": load, "n_tokens": jnp.sum(valid)}
+
+
+# ---------------------------------------------------------------------------
+# Inference: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    """Stacked (per-superblock) cache pytree."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def one(kind):
+        if kind in ("attn",):
+            return attn.init_kv_cache(cfg, batch, max_len, dt)
+        if kind == "local":
+            return attn.init_local_cache(cfg, batch, dt)
+        if kind == "mla":
+            return mla_mod.init_mla_cache(cfg, batch, max_len, dt)
+        if kind == "mamba2":
+            return m2.init_mamba2_cache(cfg, batch, cfg.d_model, dt)
+        if kind == "rglru":
+            return rg.init_rglru_cache(cfg, batch, dt)
+        raise ValueError(kind)
+
+    per_super = {f"l{i}": one(kind) for i, kind in enumerate(cfg.block_pattern)}
+
+    def stack(n):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), per_super
+        )
+
+    if cfg.ffn_kind == "moe" and cfg.n_dense_layers:
+        nd = cfg.n_dense_layers
+        nm = cfg.n_layers - len(cfg.tail_pattern) - nd
+        out = {"dense": stack(nd), "moe": stack(nm)}
+    else:
+        out = {"all": stack(cfg.n_superblocks)}
+    if cfg.tail_pattern:
+        out["tail"] = {
+            f"l{i}": one(kind) for i, kind in enumerate(cfg.tail_pattern)
+        }
+    return out
+
+
+def _mixer_decode(p, cfg, kind, x, cache, pos, mqr_sparse):
+    if kind == "attn":
+        return attn.attention_decode(p, cfg, x, cache, pos, mqr_sparse=mqr_sparse)
+    if kind == "local":
+        return attn.local_attention_decode(p, cfg, x, cache, pos)
+    if kind == "mla":
+        return mla_mod.mla_decode(p, cfg, x, cache, pos, mqr_sparse=mqr_sparse)
+    if kind == "mamba2":
+        return m2.mamba2_decode(p, cfg, x, cache, pos)
+    if kind == "rglru":
+        return rg.rglru_decode(p, cfg, x, cache, pos)
+    raise ValueError(kind)
+
+
+def _superblock_decode(
+    block_params, cfg, x, caches, pos, moe_flags, mqr_sparse, pattern=None
+):
+    new_caches = {}
+    for i, kind in enumerate(pattern or cfg.block_pattern):
+        lp = block_params[f"l{i}"]
+        h = rmsnorm(lp["mixer_norm"], x, cfg.norm_eps)
+        y, new_caches[f"l{i}"] = _mixer_decode(
+            lp["mixer"], cfg, kind, h, caches[f"l{i}"], pos, mqr_sparse
+        )
+        x = x + y
+        h = rmsnorm(lp["ffn_norm"], x, cfg.norm_eps)
+        y, _ = _ffn_apply(lp["ffn"], cfg, h, moe_flags[i])
+        x = x + y
+    return x, new_caches
+
+
+def _decode_stack(params_stack, cache_stack, cfg, x, pos, moe_flags, mqr_sparse):
+    def body(h, inp):
+        block_params, cache = inp
+        h2, new_cache = _superblock_decode(
+            block_params, cfg, h, cache, pos, moe_flags, mqr_sparse
+        )
+        return h2, new_cache
+
+    return jax.lax.scan(body, x, (params_stack, cache_stack))
+
+
+def decode_step(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, 1) int32 (or (B,1,K) for audio)
+    caches,
+    pos,  # scalar int32
+    mqr_sparse: bool = False,
+):
+    """One decode step. Returns (logits (B,1,V...), new_caches)."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio_codebooks":
+        emb = params["embed"]
+        x = jnp.sum(
+            jnp.take_along_axis(
+                emb[None], tokens.transpose(0, 2, 1)[..., None], axis=2
+            ),
+            axis=1,
+        ).astype(dt)
+    else:
+        x = params["embed"][tokens].astype(dt)
+        if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
+            x = x * jnp.sqrt(cfg.d_model).astype(dt)
+    moe = cfg.ffn_kind == "moe"
+    if moe and cfg.n_dense_layers:
+        x, cd = _decode_stack(
+            params["blocks_dense"], caches["dense"], cfg, x, pos, (False,), mqr_sparse
+        )
+        x, cm = _decode_stack(
+            params["blocks"], caches["moe"], cfg, x, pos, (True,), mqr_sparse
+        )
+        new_caches = {"dense": cd, "moe": cm}
+    else:
+        flags = tuple(moe for _ in cfg.block_pattern)
+        x, ca = _decode_stack(
+            params["blocks"], caches["all"], cfg, x, pos, flags, mqr_sparse
+        )
+        new_caches = {"all": ca}
+    if cfg.tail_pattern:
+        tflags = tuple(moe for _ in cfg.tail_pattern)
+        x, ct = _superblock_decode(
+            params["tail"], cfg, x, caches["tail"], pos, tflags, mqr_sparse,
+            cfg.tail_pattern,
+        )
+        new_caches["tail"] = ct
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, cfg, x), new_caches
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    """Inference prefill: full forward, returns (last-token logits, hidden).
+
+    Cache extraction for every layer is available via decode-oriented
+    serving (launch/serve.py streams prefill chunks through decode_step);
+    the prefill benchmark path measures the forward trunk itself.
+    """
+    x, positions, _ = embed_inputs(params, cfg, batch)
+    hidden, _ = forward_hidden(params, cfg, x, positions)
+    return logits_fn(params, cfg, hidden[:, -1:, :])

@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, AdamWState, init_state, apply_updates, lr_schedule, global_norm  # noqa: F401
+from .compress import ef_int8_compress, ef_int8_state  # noqa: F401

@@ -1,0 +1,9 @@
+from .rules import (  # noqa: F401
+    param_specs,
+    param_shardings,
+    batch_shardings,
+    cache_shardings,
+    batch_spec,
+    cache_spec,
+    data_axes,
+)

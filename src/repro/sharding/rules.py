@@ -1,0 +1,214 @@
+"""Logical-axis sharding rules: parameter/optimizer/batch/cache specs.
+
+Mesh axes: ``("pod", "data", "model")`` multi-pod or ``("data", "model")``
+single-pod.  Logical mapping (DESIGN.md §4.1):
+
+  batch/fsdp -> ("pod", "data")   ZeRO-3: params+optimizer sharded over the
+                                  data axes, gathered per-layer inside scan
+  tp         -> "model"           heads / d_ff / vocab / experts
+  kv_seq     -> "model" or data   long-context decode (flash-decoding combine)
+
+Rules are name-based on the parameter path; unmatched leaves replicate.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh: Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    out = 1
+    for n in names:
+        out *= mesh.shape[n]
+    return out
+
+
+def _div(dim: int, n: int) -> bool:
+    return n > 0 and dim % n == 0
+
+
+def spec_for_param(path: str, shape, mesh: Mesh) -> P:
+    """Return PartitionSpec for a parameter identified by its tree path."""
+    fsdp = data_axes(mesh)
+    tp = "model"
+    ntp = axis_size(mesh, tp)
+    nfsdp = axis_size(mesh, fsdp)
+    rank = len(shape)
+    # Stacked layer dim (scan) gets None.
+    lead: Tuple[Any, ...] = ()
+    if "blocks" in path or path.startswith("mtp"):
+        lead = (None,)
+        shape = shape[1:]
+        rank -= 1
+
+    def ok(i, n):
+        return _div(shape[i], n)
+
+    name = path.split("/")[-1]
+
+    def final(spec_tail):
+        return P(*(lead + tuple(spec_tail)))
+
+    # --- embeddings / heads -------------------------------------------------
+    if name == "embed":
+        if rank == 3:  # audio codebooks (K, V, D)
+            return final(
+                (None, tp if ok(1, ntp) else None, fsdp if ok(2, nfsdp) else None)
+            )
+        return final((tp if ok(0, ntp) else None, fsdp if ok(1, nfsdp) else None))
+    if name == "lm_head":
+        if rank == 3:  # (K, D, V)
+            return final(
+                (None, fsdp if ok(1, nfsdp) else None, tp if ok(2, ntp) else None)
+            )
+        return final((fsdp if ok(0, nfsdp) else None, tp if ok(1, ntp) else None))
+
+    # --- attention -----------------------------------------------------------
+    if name in ("wq", "wk", "wv"):  # (D, H, Dh)
+        return final(
+            (fsdp if ok(0, nfsdp) else None, tp if ok(1, ntp) else None, None)
+        )
+    if name == "wo":  # (H*Dh, D)
+        return final((tp if ok(0, ntp) else None, fsdp if ok(1, nfsdp) else None))
+    # --- MLA ------------------------------------------------------------------
+    if name in ("wq_a", "wkv_a"):  # (D, R)
+        return final((fsdp if ok(0, nfsdp) else None, None))
+    if name in ("wq_b", "wk_b", "wv_b"):  # (R, H, k)
+        return final(
+            (fsdp if ok(0, nfsdp) else None, tp if ok(1, ntp) else None, None)
+        )
+    # --- MoE -------------------------------------------------------------------
+    if name == "router":
+        return final((fsdp if ok(0, nfsdp) else None, None))
+    if name in ("w_in", "w_gate") and rank == 3:  # (E, D, F) experts
+        return final(
+            (tp if ok(0, ntp) else None, fsdp if ok(1, nfsdp) else None, None)
+        )
+    if name == "w_out" and rank == 3:  # (E, F, D)
+        return final(
+            (tp if ok(0, ntp) else None, None, fsdp if ok(1, nfsdp) else None)
+        )
+    # --- dense FFN --------------------------------------------------------------
+    if name in ("w_in", "w_gate") and rank == 2:  # (D, F)
+        return final((fsdp if ok(0, nfsdp) else None, tp if ok(1, ntp) else None))
+    if name == "w_out" and rank == 2:  # (F, D)
+        return final((tp if ok(0, ntp) else None, fsdp if ok(1, nfsdp) else None))
+    # --- mamba2 -------------------------------------------------------------------
+    if name == "in_proj":  # (D, X)
+        return final((fsdp if ok(0, nfsdp) else None, tp if ok(1, ntp) else None))
+    if name == "out_proj":  # (d_inner, D)
+        return final((tp if ok(0, ntp) else None, fsdp if ok(1, nfsdp) else None))
+    if name == "conv_w":  # (K, C)
+        return final((None, tp if ok(1, ntp) else None))
+    if name == "conv_b":
+        return final((tp if ok(0, ntp) else None,))
+    # --- rglru -----------------------------------------------------------------------
+    if name in ("in_x", "in_gate"):  # (D, W)
+        return final((fsdp if ok(0, nfsdp) else None, tp if ok(1, ntp) else None))
+    if name in ("w_a", "w_i"):  # (W, W)
+        return final((None, tp if ok(1, ntp) else None))
+    if name == "out":  # (W, D)
+        return final((tp if ok(0, ntp) else None, fsdp if ok(1, nfsdp) else None))
+    if name == "proj":  # MTP (2D, D)
+        return final((fsdp if ok(0, nfsdp) else None, None))
+    # norms / scalars / probes / biases: replicate
+    return final((None,) * rank)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pk in path:
+        if hasattr(pk, "key"):
+            parts.append(str(pk.key))
+        elif hasattr(pk, "idx"):
+            parts.append(str(pk.idx))
+    return "/".join(parts)
+
+
+def param_specs(params, mesh: Mesh):
+    """Pytree of PartitionSpec matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_param(_path_str(path), leaf.shape, mesh), params
+    )
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), param_specs(params, mesh)
+    )
+
+
+def batch_spec(shape, mesh: Mesh) -> P:
+    """Token batches: batch dim over the data axes when divisible."""
+    fsdp = data_axes(mesh)
+    n = axis_size(mesh, fsdp)
+    lead = fsdp if _div(shape[0], n) else None
+    return P(lead, *([None] * (len(shape) - 1)))
+
+
+def cache_spec(path: str, shape, mesh: Mesh) -> P:
+    """KV/state cache sharding for serving.
+
+    Preference order per tensor: batch over data axes; kv-heads over model;
+    otherwise sequence over model (flash-decoding style partial softmax).
+    """
+    fsdp = data_axes(mesh)
+    tp = "model"
+    ntp = axis_size(mesh, tp)
+    nfsdp = axis_size(mesh, fsdp)
+    name = path.split("/")[-1]
+    # caches are layer-stacked except the tail superblock's
+    if "tail" in path.split("/"):
+        lead: Tuple[Any, ...] = ()
+    else:
+        lead = (None,)
+        shape = shape[1:]
+    if name == "pos" or name.startswith("idx_"):
+        return P(*lead, *([None] * len(shape)))
+    b_ax = fsdp if _div(shape[0], nfsdp) else None
+
+    if name in ("k", "v"):  # (B, S, Hkv, Dh)
+        if _div(shape[2], ntp):
+            return P(*lead, b_ax, None, tp, None)
+        if _div(shape[1], ntp):
+            return P(*lead, b_ax, tp, None, None)
+        return P(*lead, b_ax, None, None, None)
+    if name == "c_kv" or name == "k_rope":  # (B, S, R)
+        if _div(shape[1], ntp):
+            return P(*lead, b_ax, tp, None)
+        return P(*lead, b_ax, None, None)
+    if name == "ssm":  # (B, H, N, P)
+        return P(*lead, b_ax, tp if _div(shape[1], ntp) else None, None, None)
+    if name == "conv":  # (B, K-1, C)
+        return P(*lead, b_ax, None, tp if _div(shape[2], ntp) else None)
+    if name == "h":  # (B, W)
+        return P(*lead, b_ax, tp if _div(shape[1], ntp) else None)
+    if name == "pos":  # (W,)
+        return P(*lead, None)
+    return P(*lead, *([None] * len(shape)))
+
+
+def cache_shardings(caches, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(_path_str(path), leaf.shape, mesh)
+        ),
+        caches,
+    )
+
+
+def batch_shardings(batch, mesh: Mesh):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_spec(leaf.shape, mesh)), batch
+    )

@@ -1,0 +1,45 @@
+"""Checkpoint: roundtrip, atomicity, keep-k, resume metadata."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+
+
+def tree():
+    return {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16), "step": jnp.asarray(3)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    t = tree()
+    mgr.save(7, t, {"loss": 1.5})
+    assert mgr.latest_step() == 7
+    r = mgr.restore(7, t)
+    np.testing.assert_array_equal(np.asarray(r["a"]), np.asarray(t["a"]))
+    assert r["nested"]["b"].dtype == jnp.bfloat16
+    assert mgr.metadata(7)["loss"] == 1.5
+
+
+def test_keep_k_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree())
+    assert sorted(mgr.all_steps()) == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(1, tree())
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_no_tmp_dirs_left(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    mgr.save(5, tree())
+    leftovers = [p for p in tmp_path.iterdir() if p.name.startswith("tmp.")]
+    assert not leftovers

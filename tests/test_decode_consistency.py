@@ -1,0 +1,83 @@
+"""decode_step with caches must reproduce the full forward logits."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.models import transformer as T
+
+ARCHS = ["llama32_1b", "mamba2_2p7b", "recurrentgemma_9b", "deepseek_v3_671b",
+         "granite_moe_1b", "musicgen_large"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_full_forward(arch):
+    cfg = registry.get_config(arch, smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    b, s = 1, 32
+    if cfg.frontend == "audio_codebooks":
+        toks = jax.random.randint(jax.random.PRNGKey(1), (b, s, cfg.n_codebooks),
+                                  0, cfg.vocab_size, jnp.int32)
+    else:
+        toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                  cfg.vocab_size, jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    x, positions, _ = T.embed_inputs(params, cfg, batch)
+    hidden, _ = T.forward_hidden(params, cfg, x, positions)
+    full_logits = T.logits_fn(params, cfg, hidden)
+
+    caches = T.init_caches(cfg, b, s)
+    step = jax.jit(lambda p, t, c, pos: T.decode_step(p, cfg, t, c, pos))
+    outs = []
+    for t in range(s):
+        tok_t = toks[:, t : t + 1]
+        lg, caches = step(params, tok_t, caches, t)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    err = float(
+        jnp.max(jnp.abs(dec.astype(jnp.float32) - full_logits.astype(jnp.float32)))
+    )
+    assert err < 0.25, (arch, err)  # bf16 accumulation tolerance
+
+
+def test_mqr_sparse_decode_runs_and_is_close():
+    """With topk == all blocks, the mqr path must equal dense decode."""
+    import dataclasses
+
+    cfg = registry.get_config("llama32_1b", smoke=True)
+    cfg = dataclasses.replace(cfg, mqr_block=16, mqr_topk=4, mqr_levels=4)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    b, s = 1, 64  # 4 blocks of 16 -> topk=4 covers everything
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size,
+                              jnp.int32)
+    caches_d = T.init_caches(cfg, b, s)
+    caches_s = T.init_caches(cfg, b, s)
+    for t in range(s):
+        tok_t = toks[:, t : t + 1]
+        lg_d, caches_d = T.decode_step(params, cfg, tok_t, caches_d, t)
+        lg_s, caches_s = T.decode_step(params, cfg, tok_t, caches_s, t,
+                                       mqr_sparse=True)
+    err = float(jnp.max(jnp.abs(lg_d.astype(jnp.float32) - lg_s.astype(jnp.float32))))
+    assert err < 0.05, err
+
+
+def test_mqr_incremental_index_matches_dense():
+    """Cache-resident incremental index (§Perf optimization): with topk
+    covering all blocks it must equal dense decode exactly."""
+    import dataclasses
+
+    cfg = registry.get_config("llama32_1b", smoke=True)
+    cfg_i = dataclasses.replace(cfg, mqr_block=16, mqr_topk=4, mqr_levels=4,
+                                mqr_incremental=True)
+    cfg_d = dataclasses.replace(cfg_i, mqr_incremental=False)
+    params = T.init_params(jax.random.PRNGKey(0), cfg_i)
+    b, s = 1, 64
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                              cfg.vocab_size, jnp.int32)
+    cd, ci = T.init_caches(cfg_d, b, s), T.init_caches(cfg_i, b, s)
+    for t in range(s):
+        tok = toks[:, t : t + 1]
+        ld, cd = T.decode_step(params, cfg_d, tok, cd, t)
+        li, ci = T.decode_step(params, cfg_i, tok, ci, t, mqr_sparse=True)
+    err = float(jnp.max(jnp.abs(ld.astype(jnp.float32) - li.astype(jnp.float32))))
+    assert err < 0.05, err

@@ -1,0 +1,41 @@
+"""Levelized JAX search == pointer search (results AND disk accesses)."""
+import numpy as np
+import pytest
+
+from repro.core import bulk, datasets, flat, mqrtree, rtree
+from repro.core import mbr as M
+import jax.numpy as jnp
+
+
+@pytest.mark.parametrize("builder", [mqrtree.build, rtree.build])
+def test_flat_parity(builder):
+    data = datasets.uniform_squares(300, seed=5)
+    t = builder(data)
+    ft = flat.flatten(t)
+    qs = datasets.region_queries(data, 8, seed=6)
+    hits, visits = flat.region_search_batch(ft, qs)
+    for i, q in enumerate(qs):
+        found, v = t.region_search(q)
+        assert set(np.nonzero(hits[i])[0]) == set(found)
+        assert v == int(visits[i])
+
+
+def test_pyramid_search_no_false_negatives():
+    pts = datasets.uniform_points(256, seed=2)
+    pyr = bulk.build_pyramid(jnp.asarray(pts, jnp.float32), levels=6)
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        lo = rng.uniform(0, 800, 2)
+        region = jnp.asarray([*lo, *(lo + 250)], jnp.float32)
+        surv = np.asarray(bulk.pyramid_search(pyr, region))
+        brute = M.overlaps(pts, np.asarray(region))
+        assert not (brute & ~surv).any(), "pyramid search missed an object"
+
+
+def test_pyramid_groups_shrink():
+    pts = datasets.uniform_points(128, seed=1)
+    pyr = bulk.build_pyramid(jnp.asarray(pts, jnp.float32), levels=6)
+    stats = bulk.pyramid_stats(pyr)
+    assert stats[0] == 1
+    assert all(b >= a for a, b in zip(stats, stats[1:]))
+    assert stats[-1] == 128  # distinct points fully separate

@@ -1,0 +1,58 @@
+"""Fault tolerance: stragglers, elastic re-mesh plans, failure/resume."""
+import numpy as np
+import pytest
+
+from repro.ft import FailureInjector, MeshPlan, StragglerMonitor, plan_mesh
+from repro.ft.failures import InjectedFailure
+
+
+def test_straggler_flags_outliers():
+    mon = StragglerMonitor(window=20, ratio_threshold=2.0, min_samples=5)
+    rng = np.random.default_rng(0)
+    flags = 0
+    for s in range(100):
+        t = 0.1 + rng.normal(0, 0.005)
+        if s in (50, 80):
+            t = 0.5  # injected straggler
+        flags += bool(mon.observe(s, t))
+    assert flags == 2
+    assert len(mon.events) == 2
+    assert mon.events[0].step == 50
+
+
+def test_straggler_does_not_poison_window():
+    mon = StragglerMonitor(window=10, ratio_threshold=2.0, min_samples=5)
+    for s in range(20):
+        mon.observe(s, 0.1)
+    assert mon.observe(20, 1.0)
+    assert mon.observe(21, 1.0)  # still flagged: median unchanged
+
+
+@pytest.mark.parametrize(
+    "avail,shape", [(512, (2, 16, 16)), (256, (16, 16)), (496, (31, 16)), (130, (8, 16))]
+)
+def test_elastic_plan(avail, shape):
+    plan = plan_mesh(avail, model_parallel=16)
+    assert plan.shape == shape
+    assert plan.n_devices == np.prod(shape)
+    assert plan.dropped == avail - plan.n_devices
+
+
+def test_elastic_plan_too_small():
+    with pytest.raises(ValueError):
+        plan_mesh(7, model_parallel=16)
+
+
+def test_failure_injection_and_training_resume(tmp_path):
+    """Train crashes at an injected step, restarts, and resumes from ckpt."""
+    from repro.launch.train import train
+
+    with pytest.raises(InjectedFailure):
+        train(arch="llama32_1b", smoke=True, steps=30, batch=2, seq=32,
+              ckpt_dir=str(tmp_path), ckpt_every=10, log_every=0,
+              fail_at_step=15, d_model=64, n_layers=2)
+    # restart: resumes from step 10 and completes
+    losses = train(arch="llama32_1b", smoke=True, steps=30, batch=2, seq=32,
+                   ckpt_dir=str(tmp_path), ckpt_every=10, log_every=0,
+                   d_model=64, n_layers=2)
+    assert len(losses) == 20  # 30 - resumed 10

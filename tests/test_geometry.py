@@ -1,0 +1,65 @@
+"""MBR algebra unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mbr as M
+
+coord = st.floats(-1e6, 1e6, allow_nan=False, width=64)
+
+
+def rect(lx, ly, hx, hy):
+    return M.make_mbr(lx, ly, hx, hy)
+
+
+@given(coord, coord, coord, coord)
+def test_make_mbr_well_formed(a, b, c, d):
+    m = rect(a, b, c, d)
+    assert m[0] <= m[2] and m[1] <= m[3]
+
+
+@given(coord, coord, coord, coord, coord, coord, coord, coord)
+@settings(max_examples=200)
+def test_merge_contains_both(a, b, c, d, e, f, g, h):
+    m1, m2 = rect(a, b, c, d), rect(e, f, g, h)
+    merged = M.merge(m1, m2)
+    assert M.contains(merged, m1) and M.contains(merged, m2)
+
+
+@given(coord, coord, coord, coord, coord, coord, coord, coord)
+@settings(max_examples=200)
+def test_intersection_symmetric_and_bounded(a, b, c, d, e, f, g, h):
+    m1, m2 = rect(a, b, c, d), rect(e, f, g, h)
+    i12 = M.intersection_area(m1, m2)
+    assert i12 == M.intersection_area(m2, m1)
+    assert i12 <= min(M.area(m1), M.area(m2)) + 1e-6
+    assert (i12 > 0) <= bool(M.overlaps(m1, m2))
+
+
+def test_union_area_exact_cases():
+    rects = np.array([[0, 0, 2, 2], [1, 1, 3, 3]], float)
+    assert M.union_area(rects) == pytest.approx(7.0)
+    rects = np.array([[0, 0, 1, 1], [2, 2, 3, 3]], float)
+    assert M.union_area(rects) == pytest.approx(2.0)
+    # containment
+    rects = np.array([[0, 0, 4, 4], [1, 1, 2, 2]], float)
+    assert M.union_area(rects) == pytest.approx(16.0)
+
+
+@given(st.integers(1, 8), st.integers(0, 10_000))
+@settings(max_examples=50)
+def test_union_area_vs_monte_carlo(n, seed):
+    rng = np.random.default_rng(seed)
+    ll = rng.uniform(0, 8, (n, 2))
+    wh = rng.uniform(0.1, 4, (n, 2))
+    rects = np.concatenate([ll, ll + wh], axis=1)
+    exact = M.union_area(rects)
+    pts = rng.uniform(0, 12, (4000, 2))
+    inside = M.contains_point(rects[:, None, :], pts[None, :, :]).any(axis=0)
+    approx = inside.mean() * 144.0
+    assert abs(exact - approx) < 0.15 * 144.0
+
+
+def test_pairwise_overlap_total():
+    rects = np.array([[0, 0, 2, 2], [1, 1, 3, 3], [10, 10, 11, 11]], float)
+    assert M.pairwise_overlap_total(rects) == pytest.approx(1.0)

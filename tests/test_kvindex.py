@@ -1,0 +1,37 @@
+"""mqr-KV index: block selection quality + jit-ability."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kvindex
+
+
+def test_select_blocks_static_and_jits():
+    key = jax.random.PRNGKey(0)
+    keys = jax.random.normal(key, (2048, 64))
+    probe = jax.random.normal(jax.random.fold_in(key, 1), (64,))
+
+    @jax.jit
+    def run(kk, qq):
+        idx = kvindex.build_kv_index(kk, probe, 128, 5)
+        region = kvindex.query_region(qq, probe, 2048)
+        return kvindex.select_blocks(idx, region, 8)
+
+    q = jax.random.normal(jax.random.fold_in(key, 2), (64,))
+    ids = run(keys, q)
+    assert ids.shape == (8,)
+    assert int(ids.min()) >= 0 and int(ids.max()) < 16
+
+
+def test_selected_blocks_cover_high_score_keys():
+    """The block holding the single highest q-aligned key must be selected."""
+    key = jax.random.PRNGKey(3)
+    keys = jax.random.normal(key, (1024, 32)) * 0.1
+    probe = jax.random.normal(jax.random.fold_in(key, 1), (32,))
+    q = probe / jnp.linalg.norm(probe)  # query aligned with the probe
+    # plant a strongly q-aligned key in block 5
+    keys = keys.at[5 * 128 + 7].set(3.0 * probe / jnp.linalg.norm(probe))
+    idx = kvindex.build_kv_index(keys, probe, 128, 5)
+    region = kvindex.query_region(q, probe, 1024)
+    ids = np.asarray(kvindex.select_blocks(idx, region, 4))
+    assert 5 in ids, ids

@@ -1,0 +1,157 @@
+"""The paper's Section 4 properties, enforced as tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import datasets, metrics, mqrtree
+from repro.core import mbr as M
+
+
+def object_level_check(t):
+    """Property 2: every object under location li is in quadrant li."""
+    def objs(e):
+        if not e.is_node:
+            return [e]
+        out = []
+        for _, ee in e.node.entries():
+            out.extend(objs(ee))
+        return out
+
+    for node, _ in t.iter_nodes():
+        if node.ntype != mqrtree.NORMAL or node.mbr is None:
+            continue
+        ncx, ncy = M.centroid(node.mbr)
+        for li, e in node.entries():
+            for oe in objs(e):
+                q = mqrtree.quad_of_point(*M.centroid(oe.mbr), ncx, ncy)
+                assert q == li, (li, oe.obj, q)
+
+
+def shape_sig(t):
+    sig = []
+
+    def walk(node, path):
+        for li, e in sorted(node.entries(), key=lambda x: x[0]):
+            if e.is_node:
+                walk(e.node, path + (li,))
+            else:
+                sig.append((path + (li,), e.obj))
+
+    walk(t.root, ())
+    return tuple(sorted(sig))
+
+
+def test_fig2_orientation_table():
+    # Fig. 2 rows, (A, B) -> placement
+    NE, NW, SW, SE, EQ = range(5)
+    cases = [
+        ((0, 0), (1, 1), SW),   # A west & south of B
+        ((0, 1), (1, 1), SW),   # due west -> SW
+        ((0, 2), (1, 1), NW),   # northwest
+        ((1, 2), (1, 1), NW),   # due north -> NW
+        ((2, 0), (1, 1), SE),   # southeast
+        ((1, 0), (1, 1), SE),   # due south -> SE
+        ((2, 2), (1, 1), NE),   # northeast
+        ((2, 1), (1, 1), NE),   # due east -> NE
+        ((1, 1), (1, 1), EQ),
+    ]
+    for (ax, ay), (bx, by), want in cases:
+        assert mqrtree.quad_of_point(ax, ay, bx, by) == want
+
+
+@pytest.mark.parametrize("kind", ["uniform_points", "exponential_points"])
+def test_zero_overlap_for_points(kind):
+    data = datasets.REGISTRY[kind](400, seed=3)
+    t = mqrtree.build(data)
+    t.validate()
+    m = metrics.compute_metrics(t)
+    assert m.overlap == 0.0  # paper section 4, property 4
+
+
+@given(st.integers(0, 1000), st.integers(5, 60))
+@settings(max_examples=25, deadline=None)
+def test_insertion_order_independence(seed, n):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 100, (n, 2))
+    mbrs = np.concatenate([pts, pts], axis=1)
+    ref = None
+    for s in range(3):
+        perm = np.random.default_rng(seed * 7 + s).permutation(n)
+        t = mqrtree.MQRTree()
+        for i in perm:
+            t.insert(int(i), mbrs[i])
+        t.validate()
+        object_level_check(t)
+        sig = shape_sig(t)
+        if ref is None:
+            ref = sig
+        assert sig == ref
+
+
+@given(st.integers(0, 500), st.integers(5, 50))
+@settings(max_examples=25, deadline=None)
+def test_validity_and_completeness_objects(seed, n):
+    rng = np.random.default_rng(seed)
+    ll = rng.uniform(0, 100, (n, 2))
+    wh = rng.uniform(0.1, 20, (n, 2))
+    mbrs = np.concatenate([ll, ll + wh], axis=1)
+    t = mqrtree.build(mbrs)
+    t.validate()
+    got = sorted(o for o, _ in t.all_objects())
+    assert got == list(range(n))
+
+
+def test_duplicate_centroids_center_nodes():
+    # many objects sharing one centroid exercise the CENTER chain
+    base = np.array([50.0, 50.0, 60.0, 60.0])
+    mbrs = np.stack([base + np.array([-k, -k, k, k]) for k in range(8)])
+    t = mqrtree.build(mbrs)
+    t.validate()
+    assert sorted(o for o, _ in t.all_objects()) == list(range(8))
+    found, _ = t.region_search(np.array([54, 54, 56, 56.0]))
+    assert sorted(found) == list(range(8))
+
+
+def test_entry_half_area_in_quadrant_points():
+    """Property 3 (weak form checked on points where it is exact)."""
+    data = datasets.uniform_points(200, seed=9)
+    t = mqrtree.build(data)
+    m = metrics.compute_metrics(t)
+    assert m.overlap == 0.0
+
+
+def test_height_vs_paper_scale():
+    data = datasets.uniform_squares(1000, seed=4)
+    t = mqrtree.build(data)
+    m = metrics.compute_metrics(t)
+    # paper table 1 at 1000 objects: worst-case height 8, avg 6 — allow slack
+    assert m.height <= 12
+    assert m.avg_path <= m.height
+    assert m.avg_path >= 2
+
+
+def test_point_search_single_path_for_points():
+    """Paper §5.5: zero overlap on point data => point queries follow at
+    most one path (visits <= max height)."""
+    data = datasets.uniform_points(500, seed=21)
+    t = mqrtree.build(data)
+    m = metrics.compute_metrics(t)
+    for i in range(0, 500, 23):
+        p = data[i, :2]
+        found, visits = mqrtree.point_search(t, p)
+        assert i in found
+        assert visits <= m.height, (visits, m.height)  # ONE path
+
+
+def test_knn_matches_bruteforce():
+    data = datasets.uniform_points(300, seed=22)
+    t = mqrtree.build(data)
+    pts = data[:, :2]
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        q = rng.uniform(0, 1000, 2)
+        ids, visits = mqrtree.knn_search(t, q, k=5)
+        d2 = ((pts - q) ** 2).sum(axis=1)
+        brute = set(np.argsort(d2)[:5])
+        assert set(ids) == brute
+        assert visits < 300  # far fewer than all nodes

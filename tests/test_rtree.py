@@ -1,0 +1,31 @@
+"""R-tree baseline: structural invariants + search correctness."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import datasets, rtree
+from repro.core import mbr as M
+
+
+@given(st.integers(0, 300), st.integers(5, 80))
+@settings(max_examples=20, deadline=None)
+def test_rtree_valid_and_complete(seed, n):
+    rng = np.random.default_rng(seed)
+    ll = rng.uniform(0, 100, (n, 2))
+    mbrs = np.concatenate([ll, ll + rng.uniform(0.1, 10, (n, 2))], axis=1)
+    t = rtree.build(mbrs)
+    t.validate()
+    # every object findable
+    for i in range(0, n, 7):
+        found, _ = t.region_search(mbrs[i])
+        assert i in found
+
+
+def test_search_matches_bruteforce():
+    data = datasets.uniform_squares(500, seed=1)
+    t = rtree.build(data)
+    qs = datasets.region_queries(data, 20, seed=2)
+    for q in qs:
+        found, visits = t.region_search(q)
+        brute = set(np.nonzero(M.overlaps(data, q))[0])
+        assert set(found) == brute
+        assert visits >= 1
