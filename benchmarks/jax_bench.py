@@ -54,6 +54,34 @@ def bench_mbr_scan_kernel():
     ]
 
 
+def bench_pyramid_scan():
+    """The paper's Section 5 disk-access comparison, on-accelerator: fused
+    single-launch level sweep vs one-kernel-per-level vs host pointers."""
+    n, n_q = 2000, 32
+    data = datasets.uniform_squares(n, seed=1)
+    tree = mqrtree.build(data)
+    sched = flat.level_schedule(flat.flatten(tree))
+    qs = datasets.region_queries(data, n_q, seed=2)
+    qj = jnp.asarray(qs, jnp.float32)
+
+    t_fused = _timeit(lambda: ops.pyramid_scan(sched, qj), iters=3)
+    t_level = _timeit(lambda: ops.per_level_region_search(sched, qj), iters=3)
+    t_host = _timeit(
+        lambda: [tree.region_search(np.asarray(q)) for q in qs], iters=2
+    )
+    _, visits = ops.pyramid_scan(sched, qj)
+    accesses = int(jnp.sum(visits))
+    _, _, launches = ops.per_level_region_search(sched, qj)
+    return [
+        (t_fused, {"impl": "pyramid-scan-fused", "launches": 1,
+                   "q/s": round(n_q / t_fused), "accesses": accesses}),
+        (t_level, {"impl": "per-level-mbr-scan", "launches": launches,
+                   "q/s": round(n_q / t_level), "accesses": accesses}),
+        (t_host, {"impl": "host-pointer", "launches": 0,
+                  "q/s": round(n_q / t_host), "accesses": accesses}),
+    ]
+
+
 def bench_mqr_sparse_vs_dense_decode():
     """The paper's payoff on the KV cache: pruned vs full decode attention."""
     key = jax.random.PRNGKey(0)
@@ -90,5 +118,6 @@ JAX_BENCHES = {
     "jax_flat_search": bench_flat_search,
     "jax_pyramid_build": bench_pyramid_build,
     "kernel_mbr_scan": bench_mbr_scan_kernel,
+    "kernel_pyramid_scan": bench_pyramid_scan,
     "mqr_sparse_vs_dense_decode": bench_mqr_sparse_vs_dense_decode,
 }

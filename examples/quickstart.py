@@ -38,6 +38,16 @@ def main():
     print(f"JAX levelized search: identical results, visits match "
           f"({int(visits.sum())} == {vm})")
 
+    # 4. The fused Pallas pipeline: the whole levelized sweep in ONE kernel
+    # launch (DESIGN.md §3.3), same results and per-level disk accesses.
+    from repro.kernels import ops
+    sched = flat.level_schedule(ft)
+    fhits, fvisits = ops.pyramid_scan(sched, qs)
+    fhits, fvisits = np.asarray(fhits), np.asarray(fvisits)
+    assert all(set(np.nonzero(fhits[i])[0]) == host_hits[i] for i in range(len(qs)))
+    print(f"fused pyramid_scan: 1 launch for {sched.levels} levels, "
+          f"identical results, accesses match ({int(fvisits.sum())} == {vm})")
+
 
 if __name__ == "__main__":
     main()

@@ -15,7 +15,10 @@ dense group id of object i, and ``group_mbr[l, g]`` the group's MBR.  Group
 0 at level 0 is the root.  An object stops splitting once alone in its group
 (its group id simply stays fixed at deeper levels — harmless for search).
 The pyramid supports pointer-free region search: an object survives a query
-region iff every ancestor group MBR overlaps the region.
+region iff every ancestor group MBR overlaps the region.  For the fused
+single-launch TPU sweep, lower the pyramid to a level schedule with
+``repro.core.flat.pyramid_schedule`` and run
+``repro.kernels.ops.pyramid_scan`` (DESIGN.md §3.3).
 
 Everything is static-shape and jit/vmap-compatible.
 """

@@ -7,6 +7,13 @@ region search becomes a masked breadth-first frontier sweep expressed with
 the frontier (a node whose entries are examined), so the JAX search reports
 the *same* disk-access count as the host pointer implementation — this
 equivalence is tested in tests/test_flat_search.py.
+
+This module also exports the :class:`LevelSchedule` — the dense per-level
+form of a tree that the fused region-search kernel
+(:mod:`repro.kernels.pyramid_scan`, DESIGN.md §3.3) consumes in a single
+launch.  Both pointer trees (via :func:`level_schedule`) and the bulk group
+pyramid (via :func:`pyramid_schedule`) lower to the same schedule, so the
+kernel serves either build path.
 """
 
 from __future__ import annotations
@@ -168,3 +175,146 @@ def region_search_batch(
         cond, step, (frontier0, visits0, hits0, jnp.array(True))
     )
     return np.asarray(hits), np.asarray(visits)
+
+
+# ---------------------------------------------------------------------------
+# Level schedule: the input of the fused pyramid_scan kernel (DESIGN.md §3.3)
+# ---------------------------------------------------------------------------
+
+# MBR sentinel for padded slots: lo=+inf, hi=-inf never overlaps anything.
+# Shared by the kernel (tile padding) and the server (null query padding).
+NEVER_MBR = np.array([np.inf, np.inf, -np.inf, -np.inf], np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelSchedule:
+    """Dense per-level form of a spatial tree for the fused level sweep.
+
+    A node at level ``l`` (depth ``l`` from the root) occupies a *slot*
+    ``j`` in that level's row; padded slots carry never-overlapping
+    sentinel MBRs.  The fused kernel computes, level by level,
+
+        active[l, q, j] = active[l-1, q, parent[l, j]] & overlaps(mbr[l, j], q)
+
+    which is exactly the breadth-first frontier of the pointer search, so
+    ``active[l].sum()`` reproduces the paper's per-level disk-access counts
+    (DESIGN.md §3: one MBR tile fetch = one disk access).
+
+    mbr_cm:   (L, 4, W) float32 — node MBRs coordinate-major (lx, ly, hx, hy
+              as contiguous lane vectors; W = padded max level width).
+    parent:   (L, W) int32 — slot of the parent in level l-1 (0 at level 0
+              and for padding; harmless, padding never overlaps).
+    n_real:   (L,) int32 — real (non-padding) slots per level.
+    obj_mbr:  (E, 4) float32 — MBR of each object entry.
+    obj_level/obj_slot: (E,) int32 — the node holding the entry.
+    obj_id:   (E,) int32 — object id the entry resolves to.
+    n_objects: dense object-id space size.
+    root_unconditional: the pointer search visits the root without testing
+              its MBR — True for tree schedules; the group pyramid instead
+              requires overlap at every level (False).
+    test_object_mbr: whether an object hit additionally requires the entry
+              MBR to overlap the query (True for trees; the pyramid's
+              deepest group *is* the membership test, False).
+    """
+
+    mbr_cm: np.ndarray
+    parent: np.ndarray
+    n_real: np.ndarray
+    obj_mbr: np.ndarray
+    obj_level: np.ndarray
+    obj_slot: np.ndarray
+    obj_id: np.ndarray
+    n_objects: int
+    root_unconditional: bool = True
+    test_object_mbr: bool = True
+
+    @property
+    def levels(self) -> int:
+        return self.mbr_cm.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.mbr_cm.shape[2]
+
+
+def level_schedule(flat: FlatTree) -> LevelSchedule:
+    """Lower a :class:`FlatTree` (mqr or R) to the kernel's level schedule."""
+    n, fan = flat.children_idx.shape
+    depth = np.full((n,), -1, np.int64)
+    depth[flat.root] = 0
+    order = [flat.root]
+    head = 0
+    parent_of = np.full((n,), -1, np.int64)
+    while head < len(order):
+        ni = order[head]
+        head += 1
+        for ci in flat.children_idx[ni]:
+            if ci >= 0:
+                depth[int(ci)] = depth[ni] + 1
+                parent_of[int(ci)] = ni
+                order.append(int(ci))
+    levels = int(depth.max()) + 1
+    width = int(np.bincount(depth, minlength=levels).max())
+
+    slot_of = np.zeros((n,), np.int64)
+    fill = np.zeros((levels,), np.int64)
+    mbr = np.broadcast_to(NEVER_MBR, (levels, width, 4)).copy()
+    parent = np.zeros((levels, width), np.int32)
+    for ni in order:  # BFS order => parents are slotted before children
+        l = int(depth[ni])
+        j = int(fill[l])
+        fill[l] += 1
+        slot_of[ni] = j
+        mbr[l, j] = flat.node_mbr[ni]
+        if l > 0:
+            parent[l, j] = slot_of[parent_of[ni]]
+
+    is_obj = flat.children_idx <= -2
+    node_ids, _ = np.nonzero(is_obj)
+    obj_mbr = flat.children_mbr[is_obj].astype(np.float32)
+    obj_level = depth[node_ids].astype(np.int32)
+    obj_slot = slot_of[node_ids].astype(np.int32)
+    obj_id = (-(flat.children_idx[is_obj] + 2)).astype(np.int32)
+
+    return LevelSchedule(
+        mbr_cm=np.ascontiguousarray(mbr.transpose(0, 2, 1)),
+        parent=parent,
+        n_real=fill.astype(np.int32),
+        obj_mbr=obj_mbr,
+        obj_level=obj_level,
+        obj_slot=obj_slot,
+        obj_id=obj_id,
+        n_objects=flat.n_objects,
+        root_unconditional=True,
+        test_object_mbr=True,
+    )
+
+
+def pyramid_schedule(pyr, obj_mbrs: np.ndarray) -> LevelSchedule:
+    """Lower a :class:`repro.core.bulk.GroupPyramid` to the level schedule.
+
+    Dense group ids are the slots; ``bulk._group_bounds`` already pads
+    unused ids with +inf/-inf sentinels.  Group nesting (a level-``l``
+    group's members share one level-``l-1`` group) makes the parent map
+    well defined.  Search semantics match :func:`repro.core.bulk.
+    pyramid_search`: an object survives iff every ancestor group overlaps.
+    """
+    group_of = np.asarray(pyr.group_of)       # (L, n)
+    group_mbr = np.asarray(pyr.group_mbr, np.float32)  # (L, n, 4)
+    levels, n = group_of.shape
+    parent = np.zeros((levels, n), np.int32)
+    for l in range(1, levels):
+        parent[l, group_of[l]] = group_of[l - 1]
+    n_real = (group_of.max(axis=1) + 1).astype(np.int32)
+    return LevelSchedule(
+        mbr_cm=np.ascontiguousarray(group_mbr.transpose(0, 2, 1)),
+        parent=parent,
+        n_real=n_real,
+        obj_mbr=np.asarray(obj_mbrs, np.float32),
+        obj_level=np.full((n,), levels - 1, np.int32),
+        obj_slot=group_of[levels - 1].astype(np.int32),
+        obj_id=np.arange(n, dtype=np.int32),
+        n_objects=n,
+        root_unconditional=False,
+        test_object_mbr=False,
+    )

@@ -16,6 +16,8 @@ from . import ref
 from .flash_attention import flash_attention as _flash
 from .mbr_scan import mbr_scan as _mbr_scan
 from .mqr_sparse_attention import mqr_sparse_attention as _sparse
+from .pyramid_scan import per_level_region_search as _per_level
+from .pyramid_scan import pyramid_scan as _pyramid_scan
 from .rmsnorm import rmsnorm as _rmsnorm
 
 
@@ -32,6 +34,22 @@ def mbr_scan(mbrs, queries, *, block_n: int = 512):
         jnp.asarray(queries, jnp.float32),
         block_n=block_n,
         interpret=_interpret(),
+    )
+
+
+def pyramid_scan(schedule, queries, *, block_w: int = 128):
+    """Fused multi-level region search: one launch for the whole levelized
+    sweep (DESIGN.md §3.3).  Returns (hits (Q, n_obj), visits (Q, L))."""
+    return _pyramid_scan(
+        schedule, queries, block_w=block_w, interpret=_interpret()
+    )
+
+
+def per_level_region_search(schedule, queries, *, block_w: int = 128):
+    """Baseline: one mbr_scan launch per level, host-combined frontier.
+    Returns (hits, visits, n_launches)."""
+    return _per_level(
+        schedule, queries, block_w=block_w, interpret=_interpret()
     )
 
 

@@ -1,0 +1,281 @@
+"""Pallas TPU kernel: fused multi-level region search (one launch per sweep).
+
+``mbr_scan`` scans ONE tree level per kernel call, so a height-``L`` search
+pays ``L`` dispatches and the survivor frontier round-trips through host
+Python between levels.  This kernel fuses the whole levelized sweep of a
+:class:`repro.core.flat.LevelSchedule` into a single ``pallas_call``
+(DESIGN.md §3.3):
+
+* grid = (levels, width tiles) — levels iterate in the outer grid dimension,
+  and TPU grid execution is sequential, so level ``l`` sees level ``l-1``'s
+  results;
+* the per-level survivor masks live in two VMEM scratch buffers
+  (``prev``/``cur``, each (Q, W)) that persist across grid steps;
+* the Q query rectangles stay resident in VMEM for the entire sweep;
+* node-MBR tiles are streamed coordinate-major (4, block_w) — one tile fetch
+  = one "disk access" of the paper (DESIGN.md §3);
+* the parent gather ``prev[:, parent[j]]`` is expressed as a one-hot matmul
+  (broadcasted-iota compare + ``jnp.dot``) so it runs on the MXU instead of
+  a lane gather.
+
+The kernel emits the full per-level active mask; a thin jnp epilogue (still
+one kernel launch) reduces it to object hits and per-level access counts
+that are bit-identical to the host pointer search / ``bulk.pyramid_search``
+(tests/test_pyramid_scan.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.flat import NEVER_MBR, LevelSchedule, _overlaps
+
+
+def _overlap_tile(q_ref, mbr_tile):
+    """(Q, 4) resident queries vs (4, BW) coordinate-major tile -> (Q, BW)."""
+    lx, ly, hx, hy = mbr_tile[0, :], mbr_tile[1, :], mbr_tile[2, :], mbr_tile[3, :]
+    qlx = q_ref[:, 0][:, None]
+    qly = q_ref[:, 1][:, None]
+    qhx = q_ref[:, 2][:, None]
+    qhy = q_ref[:, 3][:, None]
+    return (
+        (lx[None, :] <= qhx)
+        & (qlx <= hx[None, :])
+        & (ly[None, :] <= qhy)
+        & (qly <= hy[None, :])
+    )
+
+
+def _sweep_kernel(
+    q_ref,       # (Q, 4) f32, resident
+    mbr_ref,     # (1, 4, BW) f32 tile of level l
+    parent_ref,  # (1, BW) i32 tile of level l
+    act_ref,     # out (1, Q, BW) bool
+    prev_ref,    # scratch (Q, W) f32 — level l-1 survivors
+    cur_ref,     # scratch (Q, W) f32 — level l survivors
+    *,
+    block_w: int,
+    width: int,
+    root_unconditional: bool,
+    onehot_gather: bool,
+):
+    l = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when((t == 0) & (l > 0))
+    def _roll():  # level finished: its survivors become the parent mask
+        prev_ref[...] = cur_ref[...]
+
+    ov = _overlap_tile(q_ref, mbr_ref[0])  # (Q, BW)
+
+    if onehot_gather:
+        # TPU path: parent gather as a one-hot matmul on the MXU,
+        # onehot[p, j] = (p == parent[j]) — no lane gather needed.
+        iota = jax.lax.broadcasted_iota(jnp.int32, (width, block_w), 0)
+        onehot = (iota == parent_ref[0][None, :]).astype(jnp.float32)
+        pa = jnp.dot(prev_ref[...], onehot, preferred_element_type=jnp.float32)
+    else:
+        # Interpreter path: O(Q·BW) column gather instead of O(Q·W·BW).
+        pa = jnp.take(prev_ref[...], parent_ref[0], axis=1)
+    parent_active = pa > 0.5
+
+    if root_unconditional:
+        # The pointer search always examines the root node (slot 0).
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, block_w), 1)[0]
+        root = (t * block_w + col) == 0
+        act0 = jnp.broadcast_to(root[None, :], ov.shape)
+    else:
+        act0 = ov
+    act = jnp.where(l == 0, act0, parent_active & ov)
+
+    cur_ref[:, pl.ds(t * block_w, block_w)] = act.astype(jnp.float32)
+    act_ref[0] = act
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block_w", "root_unconditional", "interpret", "onehot_gather"
+    ),
+)
+def level_sweep(
+    queries: jnp.ndarray,   # (Q, 4) f32
+    mbr_cm: jnp.ndarray,    # (L, 4, W) f32
+    parent: jnp.ndarray,    # (L, W) i32
+    *,
+    block_w: int = 128,
+    root_unconditional: bool = True,
+    interpret: bool = False,
+    onehot_gather: bool | None = None,
+) -> jnp.ndarray:
+    """Run the fused sweep; returns the (L, Q, W) per-level active mask."""
+    levels, _, w = mbr_cm.shape
+    q = queries.shape[0]
+    pad = (-w) % block_w
+    if pad:
+        mbr_cm = jnp.concatenate(
+            [mbr_cm,
+             jnp.broadcast_to(jnp.asarray(NEVER_MBR)[None, :, None],
+                              (levels, 4, pad))],
+            axis=2,
+        )
+        parent = jnp.concatenate(
+            [parent, jnp.zeros((levels, pad), parent.dtype)], axis=1
+        )
+    wp = w + pad
+    grid = (levels, wp // block_w)
+    if onehot_gather is None:
+        # The MXU one-hot matmul is the native TPU lowering; the column
+        # gather is cheaper (O(Q·W) vs O(Q·W²/BW)) where gathers are free.
+        onehot_gather = not interpret
+    kernel = functools.partial(
+        _sweep_kernel,
+        block_w=block_w,
+        width=wp,
+        root_unconditional=root_unconditional,
+        onehot_gather=onehot_gather,
+    )
+    act = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q, 4), lambda l, t: (0, 0)),
+            pl.BlockSpec((1, 4, block_w), lambda l, t: (l, 0, t)),
+            pl.BlockSpec((1, block_w), lambda l, t: (l, t)),
+        ],
+        out_specs=pl.BlockSpec((1, q, block_w), lambda l, t: (l, 0, t)),
+        out_shape=jax.ShapeDtypeStruct((levels, q, wp), jnp.bool_),
+        scratch_shapes=[
+            pltpu.VMEM((q, wp), jnp.float32),
+            pltpu.VMEM((q, wp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(queries, mbr_cm, parent)
+    return act[:, :, :w]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_objects", "block_w", "root_unconditional", "test_object_mbr",
+        "interpret",
+    ),
+)
+def _fused_search(
+    queries, mbr_cm, parent, obj_mbr, obj_level, obj_slot, obj_id,
+    *,
+    n_objects: int,
+    block_w: int,
+    root_unconditional: bool,
+    test_object_mbr: bool,
+    interpret: bool,
+):
+    act = level_sweep(
+        queries, mbr_cm, parent,
+        block_w=block_w,
+        root_unconditional=root_unconditional,
+        interpret=interpret,
+    )  # (L, Q, W)
+    # Per-level access counts: padded slots carry sentinel MBRs and are
+    # never active, so a plain sum counts exactly the visited real nodes.
+    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))  # (Q, L)
+    # Object-hit epilogue: entry e hits iff its holding node is active
+    # (and, for tree schedules, its own MBR overlaps the query).
+    entry_act = act[obj_level, :, obj_slot]  # (E, Q)
+    hit = jnp.transpose(entry_act)           # (Q, E)
+    if test_object_mbr:
+        hit = hit & _overlaps(obj_mbr[None, :, :], queries[:, None, :])
+    q = queries.shape[0]
+    hits = jnp.zeros((q, max(n_objects, 1)), jnp.bool_)
+    hits = hits.at[:, obj_id].max(hit)
+    return hits, visits
+
+
+def pyramid_scan(
+    schedule: LevelSchedule,
+    queries,
+    *,
+    block_w: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused region search over a :class:`LevelSchedule`.
+
+    Returns ``(hits, visits)``: hits (Q, n_objects) bool object mask and
+    visits (Q, L) int32 per-level access counts — both identical to the
+    host pointer search (tree schedules) / ``bulk.pyramid_search``
+    (pyramid schedules).  ONE kernel launch regardless of tree height.
+    """
+    return _fused_search(
+        jnp.asarray(queries, jnp.float32),
+        jnp.asarray(schedule.mbr_cm),
+        jnp.asarray(schedule.parent),
+        jnp.asarray(schedule.obj_mbr),
+        jnp.asarray(schedule.obj_level),
+        jnp.asarray(schedule.obj_slot),
+        jnp.asarray(schedule.obj_id),
+        n_objects=schedule.n_objects,
+        block_w=block_w,
+        root_unconditional=schedule.root_unconditional,
+        test_object_mbr=schedule.test_object_mbr,
+        interpret=interpret,
+    )
+
+
+def per_level_region_search(
+    schedule: LevelSchedule,
+    queries,
+    *,
+    block_w: int = 128,
+    interpret: bool = False,
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Status-quo baseline: ONE ``mbr_scan`` launch per level, survivor
+    frontier combined in host Python between launches.  Returns
+    ``(hits, visits, n_launches)`` with hits/visits matching
+    :func:`pyramid_scan`; exists so the benchmark can measure what fusing
+    the sweep saves (DESIGN.md §3.3).
+    """
+    from .mbr_scan import mbr_scan
+
+    q = np.asarray(queries, np.float32)
+    nq = q.shape[0]
+    levels, _, w = schedule.mbr_cm.shape
+    launches = 0
+    active = None
+    acts = []
+    for l in range(levels):
+        mbrs = np.ascontiguousarray(schedule.mbr_cm[l].T)  # (W, 4) row-major
+        # Sentinel-padded rows contain inf; mbr_scan pads with inf itself,
+        # so the scan is well defined and padded slots never overlap.
+        ov = np.asarray(
+            mbr_scan(jnp.asarray(mbrs), jnp.asarray(q),
+                     block_n=block_w, interpret=interpret)
+        )
+        launches += 1
+        if l == 0:
+            if schedule.root_unconditional:
+                act = np.zeros((nq, w), bool)
+                act[:, 0] = True
+            else:
+                act = ov
+        else:
+            act = ov & active[:, schedule.parent[l]]
+        active = act
+        acts.append(act)
+    act = np.stack(acts)  # (L, Q, W)
+    visits = act.sum(axis=2).T.astype(np.int32)
+    entry_act = act[schedule.obj_level, :, schedule.obj_slot].T  # (Q, E)
+    if schedule.test_object_mbr:
+        entry_act = entry_act & _overlaps(
+            schedule.obj_mbr[None, :, :], q[:, None, :]
+        )
+    hits = np.zeros((nq, max(schedule.n_objects, 1)), bool)
+    np.maximum.at(hits, (slice(None), schedule.obj_id), entry_act)
+    return hits, visits, launches

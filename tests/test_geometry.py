@@ -1,6 +1,8 @@
 """MBR algebra unit + property tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import mbr as M

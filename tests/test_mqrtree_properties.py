@@ -1,6 +1,8 @@
 """The paper's Section 4 properties, enforced as tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import datasets, metrics, mqrtree

@@ -1,5 +1,8 @@
 """R-tree baseline: structural invariants + search correctness."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import datasets, rtree
