@@ -82,6 +82,64 @@ def bench_pyramid_scan():
     ]
 
 
+def bench_index_api():
+    """Façade overhead: `SpatialIndex.region` vs calling the fused kernel
+    directly must be <5%; plus a first-class knn row (DESIGN.md §6).
+
+    Both sides deliver host-side numpy results (what a caller consumes);
+    timing interleaves the two and keeps the per-impl minimum so container
+    scheduling jitter does not swamp the microseconds of façade work.
+    """
+    from repro.index import SpatialIndex
+
+    n, n_q, k = 2000, 32, 8
+    data = datasets.uniform_squares(n, seed=1)
+    idx = SpatialIndex.build(data, structure="mqr", backend="pallas")
+    sched = idx.schedule
+    qs = datasets.region_queries(data, n_q, seed=2)
+
+    # Apples-to-apples: both sides take the same numpy queries and deliver
+    # host-side numpy results (what a caller consumes).
+    def direct():
+        hits, visits = ops.pyramid_scan(sched, qs)
+        return np.asarray(hits), np.asarray(visits)
+
+    def facade():
+        return idx.region(qs).hits
+
+    direct(), facade()  # warm / compile
+    # Paired timing: each iteration measures both back-to-back, so the
+    # slowly-drifting container noise cancels in the per-pair delta.
+    ds, fs = [], []
+    for _ in range(80):
+        t0 = time.time()
+        direct()
+        t1 = time.time()
+        facade()
+        t2 = time.time()
+        ds.append(t1 - t0)
+        fs.append(t2 - t1)
+    t_direct = float(np.median(ds))
+    t_facade = float(np.median(fs))
+    overhead = float(np.median(np.array(fs) - np.array(ds))) / t_direct
+
+    pts = np.random.default_rng(3).uniform(100, 900, (n_q, 2))
+    idx.knn(pts, k)  # warm the expanding-radius round shapes
+    before = (idx.stats.node_accesses, idx.stats.knn_queries)
+    t_knn = _timeit(lambda: idx.knn(pts, k).ids, iters=3)
+    accesses = (idx.stats.node_accesses - before[0]) / (
+        idx.stats.knn_queries - before[1]
+    )
+    return [
+        (t_direct, {"impl": "pyramid-scan-direct", "q/s": round(n_q / t_direct)}),
+        (t_facade, {"impl": "spatial-index-facade", "q/s": round(n_q / t_facade),
+                    "overhead": f"{overhead:+.1%}"}),
+        (t_knn, {"impl": "spatial-index-knn", "k": k,
+                 "q/s": round(n_q / t_knn),
+                 "accesses/query": round(accesses, 1)}),
+    ]
+
+
 def bench_mqr_sparse_vs_dense_decode():
     """The paper's payoff on the KV cache: pruned vs full decode attention."""
     key = jax.random.PRNGKey(0)
@@ -119,5 +177,6 @@ JAX_BENCHES = {
     "jax_pyramid_build": bench_pyramid_build,
     "kernel_mbr_scan": bench_mbr_scan_kernel,
     "kernel_pyramid_scan": bench_pyramid_scan,
+    "index_api": bench_index_api,
     "mqr_sparse_vs_dense_decode": bench_mqr_sparse_vs_dense_decode,
 }

@@ -1,4 +1,4 @@
-"""Quickstart: build an mqr-tree, compare with the R-tree, run the JAX path.
+"""Quickstart: one `SpatialIndex` façade over every tree × backend path.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,7 +8,8 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import datasets, flat, metrics, mqrtree, rtree
+from repro import SpatialIndex
+from repro.core import datasets, metrics, mqrtree, rtree
 
 
 def main():
@@ -24,29 +25,40 @@ def main():
     print(f"\nmqr overlap is {100 * (1 - m.overlap / r.overlap):.0f}% lower; "
           "on point data it is exactly ZERO (paper section 4).")
 
-    # 2. Region search: disk accesses
+    # 2. One façade, every build/query path: same call shape for the host
+    # pointer oracle, the jit'd lax sweep, and the fused Pallas kernel.
     qs = datasets.region_queries(data, 20, seed=1)
-    vm = sum(mq.region_search(q)[1] for q in qs)
-    vr = sum(rt.region_search(q)[1] for q in qs)
-    print(f"\nregion search over 20 queries: mqr {vm} node visits, r-tree {vr}")
+    host = SpatialIndex.build(data, structure="mqr", backend="host")
+    rhost = SpatialIndex.build(data, structure="rtree", backend="host")
+    ref = host.region(qs)
+    vr = int(rhost.region(qs).visits.sum())
+    print(f"\nregion search over 20 queries: mqr {int(ref.visits.sum())} node "
+          f"visits (host oracle); r-tree {vr}")
 
-    # 3. The TPU-adapted path: levelized arrays + batched JAX search
-    ft = flat.flatten(mq)
-    hits, visits = flat.region_search_batch(ft, qs)
-    host_hits = [set(mq.region_search(q)[0]) for q in qs]
-    assert all(set(np.nonzero(hits[i])[0]) == host_hits[i] for i in range(len(qs)))
-    print(f"JAX levelized search: identical results, visits match "
-          f"({int(visits.sum())} == {vm})")
+    for backend in ("lax", "pallas", "serve"):
+        idx = host.with_backend(backend)  # same build artifacts, new engine
+        res = idx.region(qs)
+        assert np.array_equal(res.hits, ref.hits)
+        assert np.array_equal(res.visits_per_level, ref.visits_per_level)
+        print(f"backend={backend:6s} identical hits + per-level disk "
+              f"accesses ({idx.stats.node_accesses} total, "
+              f"{idx.stats.launches} launches)")
 
-    # 4. The fused Pallas pipeline: the whole levelized sweep in ONE kernel
-    # launch (DESIGN.md §3.3), same results and per-level disk accesses.
-    from repro.kernels import ops
-    sched = flat.level_schedule(ft)
-    fhits, fvisits = ops.pyramid_scan(sched, qs)
-    fhits, fvisits = np.asarray(fhits), np.asarray(fvisits)
-    assert all(set(np.nonzero(fhits[i])[0]) == host_hits[i] for i in range(len(qs)))
-    print(f"fused pyramid_scan: 1 launch for {sched.levels} levels, "
-          f"identical results, accesses match ({int(fvisits.sum())} == {vm})")
+    # 3. k-NN as a first-class query: host branch-and-bound oracle vs the
+    # TPU expanding-radius schedule over the fused kernel.
+    pts = np.random.default_rng(2).uniform(100, 900, (8, 2))
+    kh = host.knn(pts, k=5)
+    kd = host.with_backend("pallas").knn(pts, k=5)
+    assert np.array_equal(kh.ids, kd.ids)
+    print(f"\nknn(k=5) over 8 points: host and fused-kernel paths agree; "
+          f"nearest of point 0: objects {kh.ids[0].tolist()} "
+          f"(host {int(kh.visits.sum())} vs device {int(kd.visits.sum())} "
+          f"accesses)")
+
+    # 4. The bulk pyramid structure through the same façade.
+    pidx = SpatialIndex.build(data, structure="pyramid", backend="pallas")
+    print(f"pyramid backend=pallas: {pidx.count(qs).sum()} total hits over "
+          f"{pidx.schedule.levels} levels, one kernel launch per batch")
 
 
 if __name__ == "__main__":

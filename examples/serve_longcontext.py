@@ -7,11 +7,8 @@ import sys
 
 sys.path.insert(0, "src")
 
-import jax
-
 from repro.configs import registry
 from repro.launch.serve import serve
-from repro.models import transformer as T
 
 
 def main():

@@ -1,0 +1,26 @@
+"""repro — mqr-tree (Moreau & Osborn 2012) on TPU.
+
+The top-level package lazily re-exports the unified index façade so
+``from repro import SpatialIndex`` works without importing JAX at package
+import time (subpackages remain importable directly as before).
+"""
+
+_INDEX_EXPORTS = (
+    "SpatialIndex",
+    "RegionResult",
+    "KNNResult",
+    "AccessStats",
+    "advertised_pairs",
+)
+
+
+def __getattr__(name):
+    if name in _INDEX_EXPORTS:
+        from repro import index as _index
+
+        return getattr(_index, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_INDEX_EXPORTS))

@@ -53,7 +53,7 @@ def quad_code(acx, acy, bcx, bcy):
     ex = ~gx & ~lx
     ey = ~gy & ~ly
     ne = (gx & ~ly)             # Ax>Bx, Ay>=By
-    se = (gx & ly) | (ex & ly)  # Ax>Bx,Ay<By  or  Ax==Bx,Ay<By
+    # SE ((Ax>Bx,Ay<By) or (Ax==Bx,Ay<By)) is the final else branch below
     nw = (lx & gy) | (ex & gy)  # Ax<Bx,Ay>By  or  Ax==Bx,Ay>By
     sw = lx & ~gy               # Ax<Bx, Ay<=By
     eq = ex & ey

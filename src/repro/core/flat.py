@@ -80,14 +80,16 @@ def flatten(tree) -> FlatTree:
     nodes = []
     index = {}
 
-    def assign(node):
+    # Explicit-stack preorder walk: tree depth is unbounded (CENTER chains
+    # grow one node per ~4 co-centred objects, Section 3.4), so recursion
+    # would trip Python's recursion limit on degenerate datasets.
+    stack = [root]
+    while stack:
+        node = stack.pop()
         index[id(node)] = len(nodes)
         nodes.append(node)
-        for _, child, _ in node_entries(node):
-            if child is not None:
-                assign(child)
-
-    assign(root)
+        children = [c for _, c, _ in node_entries(node) if c is not None]
+        stack.extend(reversed(children))
 
     n = len(nodes)
     node_mbr = np.zeros((n, 4), np.float32)

@@ -23,7 +23,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .bulk import GroupPyramid, build_pyramid, pyramid_search, _overlaps
+from .bulk import GroupPyramid, build_pyramid, pyramid_search
 
 DEFAULT_BLOCK = 128
 DEFAULT_LEVELS = 6

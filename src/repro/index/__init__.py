@@ -1,0 +1,39 @@
+"""Unified spatial index façade (DESIGN.md §6).
+
+One build/query contract over every structure × backend path:
+
+    from repro.index import SpatialIndex
+    idx = SpatialIndex.build(mbrs, structure="mqr", backend="pallas")
+    idx.region(queries)   # RegionResult(hits, visits_per_level)
+    idx.knn(points, k=8)  # KNNResult(ids, dists, visits)
+"""
+
+from .api import (
+    STRUCTURES,
+    AccessStats,
+    BuildArtifacts,
+    KNNResult,
+    RegionResult,
+    SpatialIndex,
+)
+from .registry import (
+    BackendSpec,
+    advertised_pairs,
+    backend_names,
+    get_backend,
+    register_backend,
+)
+
+__all__ = [
+    "STRUCTURES",
+    "AccessStats",
+    "BackendSpec",
+    "BuildArtifacts",
+    "KNNResult",
+    "RegionResult",
+    "SpatialIndex",
+    "advertised_pairs",
+    "backend_names",
+    "get_backend",
+    "register_backend",
+]

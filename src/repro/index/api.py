@@ -1,0 +1,312 @@
+"""`SpatialIndex` — the one façade over every tree × backend path.
+
+The paper's contract is a single access method: build an index over MBRs,
+run a region search, count the disk accesses.  The repro grew four entry
+points (pointer trees, the levelized ``lax`` sweep, the fused Pallas
+kernel, the batching server) and three build paths; this module folds them
+back into one config-driven surface (DESIGN.md §6):
+
+    idx = SpatialIndex.build(mbrs, structure="mqr", backend="pallas")
+    res = idx.region(queries)        # RegionResult(hits, visits_per_level)
+    res = idx.point(points)          # degenerate-rectangle fast path
+    cnt = idx.count(queries)         # hits per query, no mask materialized
+    knn = idx.knn(points, k=8)       # k-NN as a first-class query
+
+``structure`` picks the build path (``mqr`` | ``rtree`` | ``pyramid``),
+``backend`` the query engine (``host`` | ``lax`` | ``pallas`` | ``serve``)
+via the registry in :mod:`repro.index.registry`.  Every backend reports
+the paper's disk-access accounting through the same :class:`AccessStats`
+shape, and every advertised (structure × backend) pair returns bit-identical
+hits and per-level access counts (tests/test_index_api.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import bulk, mqrtree, rtree
+from repro.core.flat import FlatTree, LevelSchedule, flatten, level_schedule, pyramid_schedule
+
+from . import knn as _knn
+from .registry import BackendSpec, get_backend
+
+STRUCTURES = ("mqr", "rtree", "pyramid")
+
+# Build-time options; everything else in **opts goes to the backend factory.
+_BUILD_OPTS = ("levels", "max_entries")
+
+
+# ---------------------------------------------------------------------------
+# Results and the shared access-accounting protocol
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionResult:
+    """Result of a batched region (or point) search.
+
+    hits:             (Q, n_objects) bool object-overlap mask.
+    visits_per_level: (Q, L) int32 — node accesses by tree level, the
+                      paper's "disk accesses" broken down by depth.  Every
+                      backend reports the identical numbers (DESIGN.md §6).
+    """
+
+    hits: np.ndarray
+    visits_per_level: np.ndarray
+
+    @property
+    def visits(self) -> np.ndarray:
+        """(Q,) total accesses per query."""
+        return self.visits_per_level.sum(axis=1)
+
+    @property
+    def counts(self) -> np.ndarray:
+        """(Q,) number of objects found per query."""
+        return self.hits.sum(axis=1)
+
+    def ids(self, i: int) -> np.ndarray:
+        """Object ids found by query ``i`` (ascending)."""
+        return np.nonzero(self.hits[i])[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class KNNResult:
+    """Result of a batched k-nearest-neighbour query.
+
+    ids:    (Q, k) int32 object ids, nearest first.
+    dists:  (Q, k) float32 Euclidean MBR min-distances, ascending.
+    visits: (Q,) int64 node accesses spent answering each query (for the
+            device path: summed over every expanding-radius round).
+    """
+
+    ids: np.ndarray
+    dists: np.ndarray
+    visits: np.ndarray
+
+
+@dataclasses.dataclass
+class AccessStats:
+    """The paper's disk-access accounting, identical across backends.
+
+    One instance accumulates over the lifetime of a :class:`SpatialIndex`;
+    backends feed it through :meth:`record` so the ledger has the same
+    meaning whether the query ran on host pointers, the ``lax`` sweep, the
+    fused Pallas kernel, or the batching server.
+    """
+
+    queries: int = 0
+    node_accesses: int = 0
+    launches: int = 0        # device dispatches (0 for the host backend)
+    knn_queries: int = 0
+    knn_rounds: int = 0      # expanding-radius region rounds issued
+
+    def record(self, n_queries: int, accesses: int, launches: int) -> None:
+        self.queries += int(n_queries)
+        self.node_accesses += int(accesses)
+        self.launches += int(launches)
+
+    @property
+    def accesses_per_query(self) -> float:
+        return self.node_accesses / max(self.queries, 1)
+
+
+# ---------------------------------------------------------------------------
+# Build artifacts: what the registry lowers a structure to, lazily
+# ---------------------------------------------------------------------------
+
+
+def _reject_opts(structure: str, **opts) -> None:
+    """A build option the chosen structure does not use fails loudly —
+    same strictness contract as the backend options."""
+    bad = [k for k, v in opts.items() if v is not None]
+    if bad:
+        raise TypeError(
+            f"structure {structure!r} does not accept option(s) {bad}"
+        )
+
+
+class BuildArtifacts:
+    """One built structure plus its lazily lowered forms.
+
+    A backend declares which artifact it consumes — the pointer tree, the
+    :class:`FlatTree`, or the :class:`LevelSchedule` — and pulls it from
+    here; each lowering is computed once and cached, so switching backends
+    over the same build (``SpatialIndex.with_backend``) is cheap.
+    """
+
+    def __init__(self, structure: str, mbrs: np.ndarray, *, levels=None,
+                 max_entries=None):
+        self.structure = structure
+        self.mbrs = np.asarray(mbrs, np.float64).reshape(-1, 4)
+        self.n_objects = self.mbrs.shape[0]
+        self.pointer_tree = None
+        self.pyramid = None
+        self._flat: Optional[FlatTree] = None
+        self._schedule: Optional[LevelSchedule] = None
+        if structure == "mqr":
+            _reject_opts(structure, levels=levels, max_entries=max_entries)
+            self.pointer_tree = mqrtree.build(self.mbrs)
+        elif structure == "rtree":
+            _reject_opts(structure, levels=levels)
+            self.pointer_tree = rtree.build(
+                self.mbrs,
+                max_entries=rtree.DEFAULT_M if max_entries is None else max_entries,
+            )
+        elif structure == "pyramid":
+            _reject_opts(structure, max_entries=max_entries)
+            if levels is None:
+                # enough 5-way splits to separate n distinct centroids
+                n = max(self.n_objects, 2)
+                levels = int(np.ceil(np.log(n) / np.log(5))) + 2
+            self.pyramid = bulk.build_pyramid(
+                np.asarray(self.mbrs, np.float32), levels=levels
+            )
+        else:
+            raise ValueError(
+                f"unknown structure {structure!r}; expected one of {STRUCTURES}"
+            )
+
+    @property
+    def flat(self) -> FlatTree:
+        if self._flat is None:
+            if self.pointer_tree is None:
+                raise ValueError(
+                    "structure 'pyramid' has no pointer tree / FlatTree form"
+                )
+            self._flat = flatten(self.pointer_tree)
+        return self._flat
+
+    @property
+    def schedule(self) -> LevelSchedule:
+        if self._schedule is None:
+            if self.pyramid is not None:
+                self._schedule = pyramid_schedule(self.pyramid, self.mbrs)
+            else:
+                self._schedule = level_schedule(self.flat)
+        return self._schedule
+
+
+# ---------------------------------------------------------------------------
+# The façade
+# ---------------------------------------------------------------------------
+
+
+class SpatialIndex:
+    """Unified build/query surface over every structure × backend path."""
+
+    def __init__(self, artifacts: BuildArtifacts, spec: BackendSpec, **backend_opts):
+        if artifacts.structure not in spec.structures:
+            raise ValueError(
+                f"backend {spec.name!r} does not serve structure "
+                f"{artifacts.structure!r} (serves: {sorted(spec.structures)})"
+            )
+        self.artifacts = artifacts
+        self.spec = spec
+        self.stats = AccessStats()
+        self._backend_opts = dict(backend_opts)
+        self._backend = spec.factory(artifacts, **backend_opts)
+
+    # -- construction --------------------------------------------------
+    @classmethod
+    def build(cls, mbrs, *, structure: str = "mqr", backend: str = "pallas",
+              **opts) -> "SpatialIndex":
+        """Build a spatial index over ``mbrs`` (n, 4).
+
+        structure: ``mqr`` (paper pointer tree) | ``rtree`` (Guttman
+            baseline) | ``pyramid`` (bulk bottom-up fixed point).
+        backend:   ``host`` (pointer/numpy oracle) | ``lax`` (jit'd level
+            sweep) | ``pallas`` (fused single-launch kernel) | ``serve``
+            (batching server: LRU cache + dedupe + vmap/pmap fan-out).
+        opts: build options (``levels`` for pyramid, ``max_entries`` for
+            rtree) plus backend options (``block_w``/``interpret`` for
+            pallas, plus ``query_block``/``cache_size`` for serve), routed
+            by key; an option the chosen structure or backend does not
+            support raises ``TypeError`` rather than being silently
+            dropped.
+        """
+        build_opts = {k: v for k, v in opts.items() if k in _BUILD_OPTS}
+        backend_opts = {k: v for k, v in opts.items() if k not in _BUILD_OPTS}
+        artifacts = BuildArtifacts(structure, mbrs, **build_opts)
+        return cls(artifacts, get_backend(backend), **backend_opts)
+
+    def with_backend(self, backend: str, **backend_opts) -> "SpatialIndex":
+        """A new index answering from the SAME build artifacts on another
+        backend (build once, serve anywhere; lowerings are shared)."""
+        return SpatialIndex(self.artifacts, get_backend(backend), **backend_opts)
+
+    # -- introspection -------------------------------------------------
+    @property
+    def structure(self) -> str:
+        return self.artifacts.structure
+
+    @property
+    def backend(self) -> str:
+        return self.spec.name
+
+    @property
+    def n_objects(self) -> int:
+        return self.artifacts.n_objects
+
+    @property
+    def schedule(self) -> LevelSchedule:
+        return self.artifacts.schedule
+
+    # -- queries -------------------------------------------------------
+    def region(self, queries) -> RegionResult:
+        """Batched region search over (Q, 4) query rectangles."""
+        queries = np.asarray(queries, np.float32).reshape(-1, 4)
+        hits, visits, launches = self._backend.region(queries)
+        self.stats.record(queries.shape[0], visits.sum(), launches)
+        return RegionResult(hits=hits, visits_per_level=visits)
+
+    def point(self, points) -> RegionResult:
+        """Point queries (Q, 2) as degenerate rectangles.
+
+        For point data the paper's zero-overlap property (§4) makes this a
+        one-path search on the mqr-tree (§5.5); all backends inherit that
+        access count through the same level sweep.
+        """
+        points = np.asarray(points, np.float32).reshape(-1, 2)
+        return self.region(np.concatenate([points, points], axis=1))
+
+    def count(self, queries) -> np.ndarray:
+        """(Q,) number of objects overlapping each query rectangle."""
+        return self.region(queries).counts
+
+    def knn(self, points, k: int) -> KNNResult:
+        """k nearest neighbours of each (Q, 2) point, by MBR min-distance.
+
+        Host backend: exact branch-and-bound over the pointer tree (brute
+        force for the pyramid, which has no pointer form).  Device
+        backends: expanding-radius region schedule driven through the
+        backend's fused sweep until ≥k survivors, one √2-margin confirming
+        round, then a top-k distance epilogue in jnp (DESIGN.md §6).
+        """
+        points = np.asarray(points, np.float64).reshape(-1, 2)
+        if not 1 <= k <= self.n_objects:
+            raise ValueError(f"k={k} outside [1, {self.n_objects}]")
+        if self.spec.name == "host":
+            if self.artifacts.pointer_tree is not None:
+                ids, dists, visits = _knn.knn_pointer(
+                    self.artifacts.pointer_tree, points, k
+                )
+            else:
+                ids, dists, visits = _knn.knn_brute(self.artifacts.mbrs, points, k)
+            self.stats.knn_queries += points.shape[0]
+            self.stats.record(points.shape[0], visits.sum(), 0)
+        else:
+            def region_fn(qs):
+                hits, visits, launches = self._backend.region(qs)
+                self.stats.record(0, visits.sum(), launches)
+                return hits, visits
+
+            ids, dists, visits, rounds = _knn.knn_expanding(
+                region_fn, self.artifacts.mbrs, points, k
+            )
+            self.stats.knn_queries += points.shape[0]
+            self.stats.knn_rounds += rounds
+            self.stats.queries += points.shape[0]
+        return KNNResult(ids=ids, dists=dists, visits=visits)

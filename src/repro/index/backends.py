@@ -1,0 +1,247 @@
+"""Built-in query backends of the :class:`SpatialIndex` registry.
+
+Four engines over the same search semantics (DESIGN.md §6):
+
+* ``host``   — the oracle: per-level pointer search over the built tree
+               (numpy level sweep for the pyramid, which has no pointers);
+* ``lax``    — the whole level sweep as one jit'd ``lax.scan`` (pure XLA,
+               no Pallas; runs anywhere JAX does);
+* ``pallas`` — the fused single-launch kernel (``kernels.ops.pyramid_scan``);
+* ``serve``  — the batching :class:`SpatialServer` (LRU cache, dedupe,
+               vmap/pmap fan-out) as a backend adapter.
+
+Every adapter returns ``(hits (Q, n_obj) bool, visits (Q, L) int32,
+launches int)`` with bit-identical hits and per-level access counts, so
+the façade's :class:`AccessStats` ledger means the same thing everywhere.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mbr as M
+from repro.core.flat import LevelSchedule
+from repro.kernels import ops
+
+from .registry import register_backend
+from .trees import node_children, node_mbr, tree_height
+
+ALL_STRUCTURES = ("mqr", "rtree", "pyramid")
+
+
+def _overlap_np(a, b):
+    """Closed-boundary rectangle intersection, broadcasting.
+
+    Pure indexing/comparison ops, so the same function serves numpy arrays
+    (host sweep) and traced jnp arrays (the jitted lax sweep) — ONE copy of
+    the boundary semantics every backend's parity depends on."""
+    return (
+        (a[..., 0] <= b[..., 2])
+        & (b[..., 0] <= a[..., 2])
+        & (a[..., 1] <= b[..., 3])
+        & (b[..., 1] <= a[..., 3])
+    )
+
+
+# ---------------------------------------------------------------------------
+# host
+# ---------------------------------------------------------------------------
+
+
+@register_backend(
+    "host",
+    structures=ALL_STRUCTURES,
+    artifact="pointer",
+    doc="per-level pointer search (numpy sweep for the pyramid); the oracle",
+)
+class HostBackend:
+    def __init__(self, artifacts):
+        self.artifacts = artifacts
+        self.tree = artifacts.pointer_tree
+        if self.tree is not None:
+            self.levels = tree_height(self.tree)
+        else:
+            self.schedule = artifacts.schedule
+            self.levels = self.schedule.levels
+
+    def region(self, queries: np.ndarray):
+        if self.tree is None:
+            hits, visits = schedule_region_numpy(self.schedule, queries)
+            return hits, visits, 0
+        nq = queries.shape[0]
+        hits = np.zeros((nq, max(self.artifacts.n_objects, 1)), bool)
+        visits = np.zeros((nq, self.levels), np.int32)
+        for i, q in enumerate(queries):
+            qq = np.asarray(q, np.float64)
+            stack = [(self.tree.root, 0)]
+            while stack:
+                node, d = stack.pop()
+                if node_mbr(node) is None:
+                    continue
+                visits[i, d] += 1
+                for embr, child, obj in node_children(node):
+                    if not M.overlaps(embr, qq):
+                        continue
+                    if child is not None:
+                        stack.append((child, d + 1))
+                    else:
+                        hits[i, obj] = True
+        return hits, visits, 0
+
+
+def schedule_region_numpy(schedule: LevelSchedule, queries: np.ndarray):
+    """Reference level sweep over a :class:`LevelSchedule`, pure numpy.
+
+    Same recurrence as the fused kernel: ``active[l] = active[l-1][parent]
+    & overlaps`` (level 0 unconditional at the root slot for tree
+    schedules).  Returns ``(hits, visits (Q, L))``.
+    """
+    queries = np.asarray(queries, np.float32)
+    nq = queries.shape[0]
+    levels, _, w = schedule.mbr_cm.shape
+    mbr = schedule.mbr_cm.transpose(0, 2, 1)  # (L, W, 4)
+    acts = np.zeros((levels, nq, w), bool)
+    for l in range(levels):
+        ov = _overlap_np(mbr[l][None, :, :], queries[:, None, :])
+        if l == 0:
+            if schedule.root_unconditional:
+                act = np.zeros((nq, w), bool)
+                act[:, 0] = True
+            else:
+                act = ov
+        else:
+            act = ov & acts[l - 1][:, schedule.parent[l]]
+        acts[l] = act
+    visits = acts.sum(axis=2).T.astype(np.int32)
+    entry_act = acts[schedule.obj_level, :, schedule.obj_slot].T  # (Q, E)
+    if schedule.test_object_mbr:
+        entry_act = entry_act & _overlap_np(
+            schedule.obj_mbr[None, :, :], queries[:, None, :]
+        )
+    hits = np.zeros((nq, max(schedule.n_objects, 1)), bool)
+    np.maximum.at(hits, (slice(None), schedule.obj_id), entry_act)
+    return hits, visits
+
+
+# ---------------------------------------------------------------------------
+# lax
+# ---------------------------------------------------------------------------
+
+
+@register_backend(
+    "lax",
+    structures=ALL_STRUCTURES,
+    artifact="schedule",
+    doc="whole level sweep as one jit'd lax.scan (pure XLA, no Pallas)",
+)
+class LaxBackend:
+    def __init__(self, artifacts):
+        sched = artifacts.schedule
+        self._run = _make_lax_sweep(sched)
+
+    def region(self, queries: np.ndarray):
+        hits, visits = self._run(jnp.asarray(queries, jnp.float32))
+        return np.asarray(hits), np.asarray(visits), 1
+
+
+def _make_lax_sweep(schedule: LevelSchedule):
+    mbr_rm = jnp.asarray(schedule.mbr_cm.transpose(0, 2, 1))  # (L, W, 4)
+    parent = jnp.asarray(schedule.parent)
+    obj_mbr = jnp.asarray(schedule.obj_mbr)
+    obj_level = jnp.asarray(schedule.obj_level)
+    obj_slot = jnp.asarray(schedule.obj_slot)
+    obj_id = jnp.asarray(schedule.obj_id)
+    levels, width, _ = mbr_rm.shape
+    root_unconditional = schedule.root_unconditional
+    test_object_mbr = schedule.test_object_mbr
+    n_obj = schedule.n_objects
+
+    @jax.jit
+    def run(queries):
+        nq = queries.shape[0]
+
+        def step(prev, xs):
+            mbr_l, parent_l, l = xs
+            ov = _overlap_np(mbr_l[None, :, :], queries[:, None, :])  # (Q, W)
+            pa = jnp.take(prev, parent_l, axis=1)
+            if root_unconditional:
+                act0 = jnp.zeros((nq, width), bool).at[:, 0].set(True)
+            else:
+                act0 = ov
+            act = jnp.where(l == 0, act0, pa & ov)
+            return act, act
+
+        init = jnp.zeros((nq, width), bool)
+        _, acts = jax.lax.scan(
+            step, init, (mbr_rm, parent, jnp.arange(levels))
+        )  # acts: (L, Q, W)
+        visits = jnp.transpose(acts.sum(axis=2, dtype=jnp.int32))
+        hit = jnp.transpose(acts[obj_level, :, obj_slot])  # (Q, E)
+        if test_object_mbr:
+            hit = hit & _overlap_np(obj_mbr[None, :, :], queries[:, None, :])
+        hits = jnp.zeros((nq, max(n_obj, 1)), jnp.bool_)
+        hits = hits.at[:, obj_id].max(hit)
+        return hits, visits
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# pallas
+# ---------------------------------------------------------------------------
+
+
+@register_backend(
+    "pallas",
+    structures=ALL_STRUCTURES,
+    artifact="schedule",
+    doc="fused single-launch Pallas sweep (kernels.ops.pyramid_scan)",
+)
+class PallasBackend:
+    def __init__(self, artifacts, *, block_w: int = 128, interpret=None):
+        self.schedule = artifacts.schedule
+        self.block_w = block_w
+        self.interpret = interpret
+
+    def region(self, queries: np.ndarray):
+        hits, visits = ops.pyramid_scan(
+            self.schedule, queries, block_w=self.block_w,
+            interpret=self.interpret,
+        )
+        return np.asarray(hits), np.asarray(visits), 1
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+
+@register_backend(
+    "serve",
+    structures=ALL_STRUCTURES,
+    artifact="schedule",
+    doc="batching SpatialServer: LRU cache + dedupe + vmap/pmap fan-out",
+)
+class ServeBackend:
+    def __init__(self, artifacts, *, query_block: int = 16,
+                 cache_size: int = 4096, block_w: int = 128,
+                 interpret=None):
+        # Imported here: launch.spatial_serve itself builds on the index
+        # package's kernel API, keep the layers acyclic at import time.
+        from repro.launch.spatial_serve import SpatialServer
+
+        self.server = SpatialServer(
+            artifacts.schedule,
+            query_block=query_block,
+            cache_size=cache_size,
+            block_w=block_w,
+            interpret=interpret,
+        )
+
+    def region(self, queries: np.ndarray):
+        before = self.server.stats.kernel_launches
+        hits, visits = self.server.search(queries)
+        return hits, visits, self.server.stats.kernel_launches - before

@@ -16,15 +16,58 @@ from . import ref
 from .flash_attention import flash_attention as _flash
 from .mbr_scan import mbr_scan as _mbr_scan
 from .mqr_sparse_attention import mqr_sparse_attention as _sparse
+from .pyramid_scan import _fused_search
 from .pyramid_scan import per_level_region_search as _per_level
 from .pyramid_scan import pyramid_scan as _pyramid_scan
 from .rmsnorm import rmsnorm as _rmsnorm
 
 
-def _interpret() -> bool:
+def interpret_default() -> bool:
+    """Default Pallas execution policy: interpret off TPU, compile on TPU
+    (``REPRO_PALLAS_COMPILE=1`` forces native lowering).  This is the ONE
+    public source of that policy — callers outside ``kernels/`` must not
+    reach for private module state."""
     if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
         return False
     return jax.default_backend() != "tpu"
+
+
+# Internal alias kept for the kernel wrappers below.
+_interpret = interpret_default
+
+
+def fused_search(
+    queries,
+    mbr_cm,
+    parent,
+    obj_mbr,
+    obj_level,
+    obj_slot,
+    obj_id,
+    *,
+    n_objects: int,
+    block_w: int = 128,
+    root_unconditional: bool = True,
+    test_object_mbr: bool = True,
+    interpret: bool | None = None,
+):
+    """Array-level public entry of the fused sweep (DESIGN.md §3.3).
+
+    Same computation as :func:`pyramid_scan` but over the unpacked
+    ``LevelSchedule`` arrays, so callers (e.g. the spatial server) can
+    ``vmap``/``pmap`` it over query blocks with the schedule arrays held
+    constant.  Returns ``(hits (Q, n_objects), visits (Q, L))``.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    return _fused_search(
+        queries, mbr_cm, parent, obj_mbr, obj_level, obj_slot, obj_id,
+        n_objects=n_objects,
+        block_w=block_w,
+        root_unconditional=root_unconditional,
+        test_object_mbr=test_object_mbr,
+        interpret=interpret,
+    )
 
 
 def mbr_scan(mbrs, queries, *, block_n: int = 512):
@@ -37,12 +80,14 @@ def mbr_scan(mbrs, queries, *, block_n: int = 512):
     )
 
 
-def pyramid_scan(schedule, queries, *, block_w: int = 128):
+def pyramid_scan(schedule, queries, *, block_w: int = 128,
+                 interpret: bool | None = None):
     """Fused multi-level region search: one launch for the whole levelized
-    sweep (DESIGN.md §3.3).  Returns (hits (Q, n_obj), visits (Q, L))."""
-    return _pyramid_scan(
-        schedule, queries, block_w=block_w, interpret=_interpret()
-    )
+    sweep (DESIGN.md §3.3).  Returns (hits (Q, n_obj), visits (Q, L)).
+    ``interpret=None`` follows :func:`interpret_default`."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _pyramid_scan(schedule, queries, block_w=block_w, interpret=interpret)
 
 
 def per_level_region_search(schedule, queries, *, block_w: int = 128):

@@ -11,7 +11,6 @@ import time  # noqa: E402
 import traceback  # noqa: E402
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
@@ -51,7 +50,6 @@ def parse_collectives(hlo: str):
         name, is_tuple, dt, dims = m.groups()
         if is_tuple:
             total = 0
-            header = line.split("=", 1)[1].split("(", 2)
             # tuple type text up to the op name
             tup = line.split("=", 1)[1]
             tup = tup[: tup.find(")") + 1]

@@ -55,7 +55,6 @@ def serve(
 
     # Prefill by streaming the prompt through decode steps (exact, cache-
     # building); a chunked prefill kernel is the production TPU path.
-    tok = prompts[:, :1]
     t0 = time.time()
     for t in range(prompt_len):
         nxt, caches = serve_step(params, prompts[:, t : t + 1], caches, t)

@@ -30,8 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.flat import NEVER_MBR, LevelSchedule
-from repro.kernels.ops import _interpret
-from repro.kernels.pyramid_scan import _fused_search
+from repro.kernels import ops
 
 
 @dataclasses.dataclass
@@ -70,7 +69,7 @@ class SpatialServer:
         interpret: bool | None = None,
     ):
         if interpret is None:
-            interpret = _interpret()
+            interpret = ops.interpret_default()
         self.schedule = schedule
         self.query_block = int(query_block)
         self.cache_size = int(cache_size)
@@ -87,7 +86,7 @@ class SpatialServer:
             jnp.asarray(schedule.obj_id),
         )
         inner = functools.partial(
-            _fused_search,
+            ops.fused_search,
             n_objects=schedule.n_objects,
             block_w=block_w,
             root_unconditional=schedule.root_unconditional,

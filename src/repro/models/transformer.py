@@ -15,7 +15,7 @@ caches; optionally the mqr-KV sparse path — the paper's technique).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,4 +1,6 @@
 """Levelized JAX search == pointer search (results AND disk accesses)."""
+import sys
+
 import numpy as np
 import pytest
 
@@ -30,6 +32,35 @@ def test_pyramid_search_no_false_negatives():
         surv = np.asarray(bulk.pyramid_search(pyr, region))
         brute = M.overlaps(pts, np.asarray(region))
         assert not (brute & ~surv).any(), "pyramid search missed an object"
+
+
+def test_flatten_deep_center_chain_no_recursion_blowup():
+    """Regression: `flatten` must not recurse — CENTER chains grow one node
+    per ~4 co-centred objects (Section 3.4), so tree depth is unbounded and
+    the old recursive assign() tripped Python's recursion limit on deep or
+    degenerate datasets."""
+    n = 1200  # concentric squares: identical centroids -> one CENTER chain
+    s = np.arange(1, n + 1, dtype=np.float64)[:, None]
+    mbrs = np.concatenate([500 - s, 500 - s, 500 + s, 500 + s], axis=1)
+    tree = mqrtree.build(mbrs)
+    depth = max(d for _, d in tree.iter_nodes())
+    assert depth >= n // 5  # genuinely deep
+
+    old = sys.getrecursionlimit()
+    sys.setrecursionlimit(max(depth // 2, 120))  # recursion would blow here
+    try:
+        ft = flat.flatten(tree)
+    finally:
+        sys.setrecursionlimit(old)
+    assert ft.n_objects == n
+
+    sched = flat.level_schedule(ft)
+    assert sched.levels == depth
+    q = np.array([[499.0, 499.0, 501.0, 501.0]], np.float32)
+    hits, visits = flat.region_search_batch(ft, q)
+    found, v = tree.region_search(q[0].astype(np.float64))
+    assert set(np.nonzero(hits[0])[0]) == set(found)
+    assert int(visits[0]) == v == depth  # the query walks the whole chain
 
 
 def test_pyramid_groups_shrink():

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.ft import FailureInjector, MeshPlan, StragglerMonitor, plan_mesh
+from repro.ft import StragglerMonitor, plan_mesh
 from repro.ft.failures import InjectedFailure
 
 

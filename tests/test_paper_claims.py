@@ -1,5 +1,4 @@
 """Scaled-down versions of the paper's Section 5 comparisons (trends)."""
-import numpy as np
 import pytest
 
 from repro.core import datasets, metrics, mqrtree, rtree

@@ -3,8 +3,6 @@ mqr-sparse serve path works; the mini dry-run compiles on 8 virtual devices."""
 import subprocess
 import sys
 
-import numpy as np
-
 
 def test_training_loss_decreases():
     from repro.launch.train import train
