@@ -1,19 +1,27 @@
-"""TPU-adaptation benchmarks: vectorized search, kernels, mqr-KV serving."""
+"""TPU-adaptation benchmarks: vectorized search, kernels, mqr-KV serving.
+
+``REPRO_BENCH_TINY=1`` shrinks every object count to smoke sizes so the
+CI bench-smoke job can exercise the whole harness in seconds.
+"""
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bulk, datasets, flat, kvindex, mqrtree
+from repro.core import datasets, flat, kvindex, mqrtree
 from repro.kernels import ops
 
+TINY = os.environ.get("REPRO_BENCH_TINY", "0") == "1"
 
-def _timeit(fn, *args, iters=5):
-    fn(*args)  # warm / compile
+
+def _timeit(fn, *args, iters=5, warm=True):
+    if warm:  # settle jit compilation; skip for pure-host one-pass timings
+        fn(*args)
     t0 = time.time()
     for _ in range(iters):
         r = fn(*args)
@@ -22,7 +30,7 @@ def _timeit(fn, *args, iters=5):
 
 
 def bench_flat_search():
-    data = datasets.uniform_squares(2000, seed=1)
+    data = datasets.uniform_squares(300 if TINY else 2000, seed=1)
     tree = mqrtree.build(data)
     ft = flat.flatten(tree)
     qs = jnp.asarray(datasets.region_queries(data, 32, seed=2), jnp.float32)
@@ -37,27 +45,83 @@ def bench_flat_search():
 
 
 def bench_pyramid_build():
-    pts = jnp.asarray(datasets.uniform_points(4096, seed=3), jnp.float32)
-    f = jax.jit(lambda m: bulk.build_pyramid(m, levels=7).group_mbr)
-    return [(_timeit(f, pts), {"n": 4096, "levels": 7})]
+    """Build throughput, host pointer insertion vs the device bulk build.
+
+    Both pipelines end at a query-ready ``LevelSchedule`` (the host side
+    pays build + flatten + level_schedule, the device side ONE launch of
+    the bulk fixed point, DESIGN.md §7); objects/sec at every n sits in
+    one derived dict per impl so the crossover reads off a single row.
+    """
+    ns = (200, 400) if TINY else (1_000, 10_000, 100_000)
+
+    def host_build(data):
+        return flat.level_schedule(flat.flatten(mqrtree.build(data)))
+
+    rows = []
+    for impl, build in (
+        ("host-pointer-build", host_build),
+        ("device-bulk-build", lambda d: ops.device_schedule(d)),
+    ):
+        objs_per_sec, t_last = {}, 0.0
+        device = impl.startswith("device")
+        for n in ns:
+            data = datasets.uniform_squares(n, seed=3)
+            # the host pointer build is O(minutes) at n=1e5: time ONE pass,
+            # no warm call (nothing to compile on the pure-host path)
+            iters = 3 if (device and n <= 10_000) else 1
+            t_last = _timeit(build, data, iters=iters, warm=device)
+            objs_per_sec[str(n)] = round(n / t_last)
+        rows.append((t_last, {"impl": impl, "objects_per_sec": objs_per_sec,
+                              "n_max": ns[-1]}))
+    return rows
+
+
+def bench_compact_scan():
+    """Bytes-per-query of the fused sweep: float32 tiles vs conservative
+    uint16 tiles (+ exact confirming pass).  Hit sets are asserted
+    identical; the bytes ratio is the streamed (mbr tiles + parent rows)
+    HBM traffic of one launch, which the compact path halves."""
+    n, n_q = (256, 8) if TINY else (4096, 32)
+    data = datasets.uniform_squares(n, seed=1)
+    sched = ops.device_schedule(data)
+    qsched = ops.quantize_schedule(sched)
+    qs = datasets.region_queries(data, n_q, seed=2)
+
+    t_f = _timeit(lambda: ops.pyramid_scan(sched, qs), iters=3)
+    t_c = _timeit(lambda: ops.pyramid_scan_compact(qsched, qs), iters=3)
+    hits_f, visits_f = ops.pyramid_scan(sched, qs)
+    hits_c, visits_c = ops.pyramid_scan_compact(qsched, qs)
+    assert np.array_equal(np.asarray(hits_f), np.asarray(hits_c))
+    bytes_f = sched.mbr_cm.nbytes + sched.parent.nbytes
+    bytes_c = qsched.streamed_bytes
+    return [
+        (t_f, {"impl": "float32-tiles", "q/s": round(n_q / t_f),
+               "bytes/query": round(bytes_f / n_q),
+               "accesses": int(np.asarray(visits_f).sum())}),
+        (t_c, {"impl": "compact-uint16-tiles", "q/s": round(n_q / t_c),
+               "bytes/query": round(bytes_c / n_q),
+               "bytes_ratio": round(bytes_c / bytes_f, 3),
+               "accesses": int(np.asarray(visits_c).sum())}),
+    ]
 
 
 def bench_mbr_scan_kernel():
-    lo = jnp.asarray(np.random.default_rng(0).uniform(0, 1000, (8192, 2)), jnp.float32)
+    n = 512 if TINY else 8192
+    lo = jnp.asarray(np.random.default_rng(0).uniform(0, 1000, (n, 2)), jnp.float32)
     mbrs = jnp.concatenate([lo, lo + 10.0], axis=1)
     qs = jnp.asarray(datasets.region_queries(np.asarray(mbrs), 8, seed=1), jnp.float32)
     t_k = _timeit(lambda: ops.mbr_scan(mbrs, qs), iters=3)
     t_r = _timeit(lambda: ops.mbr_scan_ref(mbrs, qs), iters=3)
     return [
-        (t_k, {"impl": "pallas-interpret", "n": 8192}),
-        (t_r, {"impl": "jnp-ref", "n": 8192}),
+        (t_k, {"impl": "pallas-interpret", "n": n}),
+        (t_r, {"impl": "jnp-ref", "n": n}),
     ]
 
 
 def bench_pyramid_scan():
     """The paper's Section 5 disk-access comparison, on-accelerator: fused
     single-launch level sweep vs one-kernel-per-level vs host pointers."""
-    n, n_q = 2000, 32
+    n, n_q = (300, 8) if TINY else (2000, 32)
     data = datasets.uniform_squares(n, seed=1)
     tree = mqrtree.build(data)
     sched = flat.level_schedule(flat.flatten(tree))
@@ -92,7 +156,7 @@ def bench_index_api():
     """
     from repro.index import SpatialIndex
 
-    n, n_q, k = 2000, 32, 8
+    n, n_q, k = (300, 8, 4) if TINY else (2000, 32, 8)
     data = datasets.uniform_squares(n, seed=1)
     idx = SpatialIndex.build(data, structure="mqr", backend="pallas")
     sched = idx.schedule
@@ -130,10 +194,35 @@ def bench_index_api():
     accesses = (idx.stats.node_accesses - before[0]) / (
         idx.stats.knn_queries - before[1]
     )
+    # Facade build throughput: `SpatialIndex.build(structure="pyramid",
+    # build="device")` objects/sec across the crossover sizes, one row.
+    build_ns = (200, 400) if TINY else (1_000, 10_000, 100_000)
+    build_objs, t_build = {}, 0.0
+    for bn in build_ns:
+        bdata = datasets.uniform_squares(bn, seed=4)
+        t_build = _timeit(
+            lambda d=bdata: SpatialIndex.build(
+                d, structure="pyramid", backend="pallas", build="device"
+            ),
+            iters=1,
+        )
+        build_objs[str(bn)] = round(bn / t_build)
+
+    # precision="compact": identical hits through the facade, half the
+    # streamed tile bytes (see kernel_compact_scan for the byte ledger).
+    cidx = idx.with_backend("pallas", precision="compact")
+    res_c = cidx.region(qs)
+    assert np.array_equal(res_c.hits, idx.region(qs).hits)
+    t_compact = _timeit(lambda: cidx.region(qs).hits, iters=3)
+
     return [
         (t_direct, {"impl": "pyramid-scan-direct", "q/s": round(n_q / t_direct)}),
         (t_facade, {"impl": "spatial-index-facade", "q/s": round(n_q / t_facade),
                     "overhead": f"{overhead:+.1%}"}),
+        (t_compact, {"impl": "spatial-index-compact",
+                     "q/s": round(n_q / t_compact)}),
+        (t_build, {"impl": "spatial-index-build-device",
+                   "objects_per_sec": build_objs, "n_max": build_ns[-1]}),
         (t_knn, {"impl": "spatial-index-knn", "k": k,
                  "q/s": round(n_q / t_knn),
                  "accesses/query": round(accesses, 1)}),
@@ -143,7 +232,7 @@ def bench_index_api():
 def bench_mqr_sparse_vs_dense_decode():
     """The paper's payoff on the KV cache: pruned vs full decode attention."""
     key = jax.random.PRNGKey(0)
-    s, d, bs, k = 16384, 64, 128, 16
+    s, d, bs, k = (2048, 64, 128, 4) if TINY else (16384, 64, 128, 16)
     nb = s // bs
     keys = jax.random.normal(key, (s, d))
     vals = jax.random.normal(jax.random.fold_in(key, 1), (s, d))
@@ -177,6 +266,7 @@ JAX_BENCHES = {
     "jax_pyramid_build": bench_pyramid_build,
     "kernel_mbr_scan": bench_mbr_scan_kernel,
     "kernel_pyramid_scan": bench_pyramid_scan,
+    "kernel_compact_scan": bench_compact_scan,
     "index_api": bench_index_api,
     "mqr_sparse_vs_dense_decode": bench_mqr_sparse_vs_dense_decode,
 }

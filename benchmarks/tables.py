@@ -15,8 +15,9 @@ import numpy as np
 from repro.core import datasets, metrics, mqrtree, rtree
 
 FULL = os.environ.get("REPRO_FULL", "0") == "1"
-SIZES = (500, 1000, 5000) if FULL else (500, 1000)
-N_TREES = 5 if FULL else 2
+TINY = os.environ.get("REPRO_BENCH_TINY", "0") == "1"
+SIZES = (120,) if TINY else (500, 1000, 5000) if FULL else (500, 1000)
+N_TREES = 1 if TINY else 5 if FULL else 2
 
 
 def _build_compare(gen, sizes=SIZES, n_trees=N_TREES, seed0=0):
@@ -77,7 +78,7 @@ TABLES = {
     "table3_exponential_objects": lambda: _build_compare(datasets.exponential_squares),
     "table4_exponential_points": lambda: _build_compare(datasets.exponential_points),
     "table5_roadlike_lines": lambda: _build_compare(
-        datasets.roadlike_lines, sizes=(2000, 5000) if FULL else (2000,)
+        datasets.roadlike_lines, sizes=SIZES if TINY else (2000, 5000) if FULL else (2000,)
     ),
     "table6_hv_lines": lambda: _build_compare(datasets.hv_lines),
     "table7_sloped_lines": lambda: _build_compare(datasets.sloped_lines),
@@ -85,12 +86,12 @@ TABLES = {
     "table9_search_uniform_objects": lambda: _search_compare(
         datasets.uniform_squares,
         lambda d: datasets.region_queries(d, 20, seed=3),
-        sizes=(2000,) if not FULL else (2000, 5000),
+        sizes=SIZES if TINY else (2000,) if not FULL else (2000, 5000),
     ),
     "table10_search_uniform_points": lambda: _search_compare(
         datasets.uniform_points,
         lambda d: datasets.region_queries(d, 20, seed=4, target_found=1.0),
-        sizes=(2000,) if not FULL else (2000, 5000),
+        sizes=SIZES if TINY else (2000,) if not FULL else (2000, 5000),
     ),
     "table11_search_exponential_objects": lambda: _search_compare(
         datasets.exponential_squares,

@@ -3,6 +3,7 @@
   PYTHONPATH=src python examples/quickstart.py
 """
 import sys
+import time
 
 sys.path.insert(0, "src")
 
@@ -59,6 +60,43 @@ def main():
     pidx = SpatialIndex.build(data, structure="pyramid", backend="pallas")
     print(f"pyramid backend=pallas: {pidx.count(qs).sum()} total hits over "
           f"{pidx.schedule.levels} levels, one kernel launch per batch")
+
+    # 5. Where the time goes: build-time / query-time split per backend.
+    # The device bulk build (DESIGN.md §7) replaces per-object host
+    # insertion with one launch; precision="compact" streams uint16 MBR
+    # tiles at half the bytes/query with bit-identical hits.
+    print("\nbuild-time / query-time split (n=1000, 20 queries):")
+    configs = [
+        ("mqr", "host", {}),
+        ("mqr", "pallas", {}),
+        ("pyramid", "pallas", {"build": "device"}),
+        ("pyramid", "pallas", {"build": "device", "precision": "compact"}),
+    ]
+    ref_hits = ref.hits
+    for structure, backend, opts in configs:
+        t0 = time.time()
+        idx = SpatialIndex.build(data, structure=structure, backend=backend,
+                                 **opts)
+        idx.region(qs)  # lowering+compile at batch shape = build column
+        t_build = time.time() - t0
+        t0 = time.time()
+        res = idx.region(qs)
+        t_query = time.time() - t0
+        if structure == "mqr":
+            assert np.array_equal(res.hits, ref_hits)
+        tag = " ".join(f"{k}={v}" for k, v in opts.items()) or "-"
+        print(f"  {structure:8s} {backend:7s} {tag:38s} "
+              f"build {t_build:6.3f}s  query {t_query * 1e3:6.1f}ms")
+
+    # 6. Batch insertion: extend() re-runs the (device) build over the
+    # concatenated arrays — no per-object host insertion.
+    didx = SpatialIndex.build(data, structure="pyramid", backend="pallas",
+                              build="device")
+    t0 = time.time()
+    grown = didx.extend(datasets.uniform_squares(500, seed=9))
+    t_ext = time.time() - t0
+    print(f"\nextend(+500 objects): {didx.n_objects} -> {grown.n_objects} "
+          f"objects in {t_ext:.3f}s (one device re-build)")
 
 
 if __name__ == "__main__":

@@ -86,6 +86,15 @@ def _group_bounds(gid: jnp.ndarray, mbrs: jnp.ndarray, n: int):
     return jnp.stack([lo_x, lo_y, hi_x, hi_y], axis=-1)
 
 
+def default_levels(n: int) -> int:
+    """Pyramid depth heuristic shared by every bulk build path: enough
+    5-way splits to separate ``n`` distinct centroids, plus slack for the
+    root and one uneven split."""
+    import math
+
+    return int(math.ceil(math.log(max(n, 2)) / math.log(5))) + 2
+
+
 def build_pyramid(mbrs: jnp.ndarray, levels: int) -> GroupPyramid:
     """Build the mqr group pyramid for ``mbrs`` (n, 4) with ``levels`` levels.
 

@@ -187,6 +187,12 @@ def region_search_batch(
 # Shared by the kernel (tile padding) and the server (null query padding).
 NEVER_MBR = np.array([np.inf, np.inf, -np.inf, -np.inf], np.float32)
 
+# Quantized-tile grid: real coordinates land in cells [0, CELLS]; lo=CELLS+1
+# is the integer never-overlap sentinel (queries are clipped to <= CELLS, so
+# a padded slot's lo exceeds every query hi).  DESIGN.md §7.
+CELLS = 65534
+Q_NEVER_MBR = np.array([CELLS + 1, CELLS + 1, 0, 0], np.uint16)
+
 
 @dataclasses.dataclass(frozen=True)
 class LevelSchedule:
@@ -237,6 +243,61 @@ class LevelSchedule:
     @property
     def width(self) -> int:
         return self.mbr_cm.shape[2]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedSchedule:
+    """Conservatively quantized tile form of a :class:`LevelSchedule`.
+
+    Node MBRs are snapped to a uint16 grid with OUTWARD rounding (lo
+    coordinates floor, hi coordinates ceil), so a quantized box always
+    contains its exact box and the quantized level sweep prunes a
+    *superset* of the exact survivors — it can never drop a true hit.
+    Survivors get one exact float32 confirming pass against
+    ``confirm_mbr`` (the entry's own MBR for tree schedules; the entry's
+    deepest group MBR for pyramid schedules — in both cases an exact
+    overlap there implies every enclosing ancestor overlaps, so confirmed
+    hit sets are bit-identical to the float32 path).  Streaming uint16
+    node tiles + uint16 parent slots moves half the bytes per query of
+    the float32 schedule (DESIGN.md §7).
+
+    base:        the exact schedule (float32 oracle; also carries the
+                 object table the confirming pass scatters through).
+    mbr_q:       (L, 4, W) uint16 outward-rounded node MBR grid cells.
+    parent_q:    (L, W) uint16 parent slots while the level width fits
+                 (W <= 65535); wider schedules (pyramid width == n) keep
+                 int32 parents and uint16 tiles — bytes ratio 0.6.
+    origin:      (4,) float32 grid origin, coordinate-major (ox, oy, ox, oy).
+    inv_cell:    (4,) float32 cells-per-unit, coordinate-major.
+    confirm_mbr: (E, 4) float32 exact MBR the confirming pass tests.
+    cells:       highest real grid cell index (sentinel is cells+1).
+    """
+
+    base: LevelSchedule
+    mbr_q: np.ndarray
+    parent_q: np.ndarray
+    origin: np.ndarray
+    inv_cell: np.ndarray
+    confirm_mbr: np.ndarray
+    cells: int = CELLS
+
+    @property
+    def levels(self) -> int:
+        return self.base.levels
+
+    @property
+    def width(self) -> int:
+        return self.base.width
+
+    @property
+    def n_objects(self) -> int:
+        return self.base.n_objects
+
+    @property
+    def streamed_bytes(self) -> int:
+        """HBM bytes the fused sweep streams per launch (node tiles +
+        parent rows); the float32 path streams ``base`` at 2x."""
+        return self.mbr_q.nbytes + self.parent_q.nbytes
 
 
 def level_schedule(flat: FlatTree) -> LevelSchedule:

@@ -18,6 +18,14 @@ via the registry in :mod:`repro.index.registry`.  Every backend reports
 the paper's disk-access accounting through the same :class:`AccessStats`
 shape, and every advertised (structure × backend) pair returns bit-identical
 hits and per-level access counts (tests/test_index_api.py).
+
+Two orthogonal throughput options (DESIGN.md §7): ``build="device"`` runs
+the pyramid's bulk fixed point on-accelerator, emitting the
+``LevelSchedule`` in one launch (no host pointer tree — and
+:meth:`SpatialIndex.extend` makes batch insertion one more such launch);
+``precision="compact"`` streams conservatively quantized uint16 MBR tiles
+through the fused sweep at half the bytes/query, with an exact float32
+confirming pass keeping hit sets bit-identical.
 """
 
 from __future__ import annotations
@@ -36,7 +44,7 @@ from .registry import BackendSpec, get_backend
 STRUCTURES = ("mqr", "rtree", "pyramid")
 
 # Build-time options; everything else in **opts goes to the backend factory.
-_BUILD_OPTS = ("levels", "max_entries")
+_BUILD_OPTS = ("levels", "max_entries", "build")
 
 
 # ---------------------------------------------------------------------------
@@ -138,32 +146,49 @@ class BuildArtifacts:
     """
 
     def __init__(self, structure: str, mbrs: np.ndarray, *, levels=None,
-                 max_entries=None):
+                 max_entries=None, build=None):
         self.structure = structure
         self.mbrs = np.asarray(mbrs, np.float64).reshape(-1, 4)
         self.n_objects = self.mbrs.shape[0]
+        # original user options, so extend() can re-run the same build
+        self.build_opts = dict(levels=levels, max_entries=max_entries,
+                               build=build)
         self.pointer_tree = None
         self.pyramid = None
         self._flat: Optional[FlatTree] = None
         self._schedule: Optional[LevelSchedule] = None
+        self._quantized = None
         if structure == "mqr":
-            _reject_opts(structure, levels=levels, max_entries=max_entries)
+            _reject_opts(structure, levels=levels, max_entries=max_entries,
+                         build=build)
             self.pointer_tree = mqrtree.build(self.mbrs)
         elif structure == "rtree":
-            _reject_opts(structure, levels=levels)
+            _reject_opts(structure, levels=levels, build=build)
             self.pointer_tree = rtree.build(
                 self.mbrs,
                 max_entries=rtree.DEFAULT_M if max_entries is None else max_entries,
             )
         elif structure == "pyramid":
             _reject_opts(structure, max_entries=max_entries)
+            if build not in (None, "host", "device"):
+                raise ValueError(
+                    f"unknown build {build!r}; expected 'host' or 'device'"
+                )
             if levels is None:
-                # enough 5-way splits to separate n distinct centroids
-                n = max(self.n_objects, 2)
-                levels = int(np.ceil(np.log(n) / np.log(5))) + 2
-            self.pyramid = bulk.build_pyramid(
-                np.asarray(self.mbrs, np.float32), levels=levels
-            )
+                levels = bulk.default_levels(self.n_objects)
+            if build == "device":
+                # Device-resident bulk build: the level fixed point runs
+                # on-accelerator and emits the LevelSchedule directly —
+                # no host pointer tree, no flatten() (DESIGN.md §7).
+                from repro.kernels import ops
+
+                self._schedule = ops.device_schedule(
+                    np.asarray(self.mbrs, np.float32), levels=levels
+                )
+            else:
+                self.pyramid = bulk.build_pyramid(
+                    np.asarray(self.mbrs, np.float32), levels=levels
+                )
         else:
             raise ValueError(
                 f"unknown structure {structure!r}; expected one of {STRUCTURES}"
@@ -187,6 +212,17 @@ class BuildArtifacts:
             else:
                 self._schedule = level_schedule(self.flat)
         return self._schedule
+
+    @property
+    def quantized(self):
+        """Compact uint16 tile form of :attr:`schedule` (DESIGN.md §7),
+        quantized once and shared by every ``precision="compact"``
+        backend over these artifacts."""
+        if self._quantized is None:
+            from repro.kernels import ops
+
+            self._quantized = ops.quantize_schedule(self.schedule)
+        return self._quantized
 
 
 # ---------------------------------------------------------------------------
@@ -220,12 +256,17 @@ class SpatialIndex:
         backend:   ``host`` (pointer/numpy oracle) | ``lax`` (jit'd level
             sweep) | ``pallas`` (fused single-launch kernel) | ``serve``
             (batching server: LRU cache + dedupe + vmap/pmap fan-out).
-        opts: build options (``levels`` for pyramid, ``max_entries`` for
-            rtree) plus backend options (``block_w``/``interpret`` for
-            pallas, plus ``query_block``/``cache_size`` for serve), routed
-            by key; an option the chosen structure or backend does not
-            support raises ``TypeError`` rather than being silently
-            dropped.
+        opts: build options (``levels`` and ``build="host"|"device"`` for
+            pyramid — ``"device"`` runs the bulk fixed point on-device and
+            emits the ``LevelSchedule`` directly, no host pointer tree;
+            ``max_entries`` for rtree) plus backend options
+            (``block_w``/``interpret``/``precision="float32"|"compact"``
+            for pallas and serve — ``"compact"`` streams conservatively
+            quantized uint16 MBR tiles with an exact confirming pass, see
+            DESIGN.md §7 — plus ``query_block``/``cache_size`` for
+            serve), routed by key; an option the chosen structure or
+            backend does not support raises ``TypeError`` rather than
+            being silently dropped.
         """
         build_opts = {k: v for k, v in opts.items() if k in _BUILD_OPTS}
         backend_opts = {k: v for k, v in opts.items() if k not in _BUILD_OPTS}
@@ -236,6 +277,23 @@ class SpatialIndex:
         """A new index answering from the SAME build artifacts on another
         backend (build once, serve anywhere; lowerings are shared)."""
         return SpatialIndex(self.artifacts, get_backend(backend), **backend_opts)
+
+    def extend(self, new_mbrs) -> "SpatialIndex":
+        """Batch insertion: a new index over ``mbrs + new_mbrs``.
+
+        The paper inserts one object at a time; the array pipeline instead
+        re-runs the (bulk) build over the concatenated object set — for
+        ``build="device"`` that is one device launch, which at bulk sizes
+        is far cheaper than per-object host insertion (DESIGN.md §7).
+        Build options (``levels`` re-derived if it was auto) and backend
+        options are inherited; the original index is untouched.
+        """
+        new_mbrs = np.asarray(new_mbrs, np.float64).reshape(-1, 4)
+        mbrs = np.concatenate([self.artifacts.mbrs, new_mbrs], axis=0)
+        artifacts = BuildArtifacts(
+            self.structure, mbrs, **self.artifacts.build_opts
+        )
+        return SpatialIndex(artifacts, self.spec, **self._backend_opts)
 
     # -- introspection -------------------------------------------------
     @property

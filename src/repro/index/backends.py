@@ -194,23 +194,42 @@ def _make_lax_sweep(schedule: LevelSchedule):
 # ---------------------------------------------------------------------------
 
 
+def _check_precision(precision: str) -> None:
+    if precision not in ("float32", "compact"):
+        raise ValueError(
+            f"unknown precision {precision!r}; expected 'float32' or 'compact'"
+        )
+
+
 @register_backend(
     "pallas",
     structures=ALL_STRUCTURES,
     artifact="schedule",
-    doc="fused single-launch Pallas sweep (kernels.ops.pyramid_scan)",
+    doc="fused single-launch Pallas sweep (kernels.ops.pyramid_scan); "
+        "precision='compact' streams conservative uint16 tiles",
 )
 class PallasBackend:
-    def __init__(self, artifacts, *, block_w: int = 128, interpret=None):
+    def __init__(self, artifacts, *, block_w: int = 128, interpret=None,
+                 precision: str = "float32"):
+        _check_precision(precision)
+        self.precision = precision
         self.schedule = artifacts.schedule
+        # Quantized once per BuildArtifacts, shared across backends.
+        self.qschedule = artifacts.quantized if precision == "compact" else None
         self.block_w = block_w
         self.interpret = interpret
 
     def region(self, queries: np.ndarray):
-        hits, visits = ops.pyramid_scan(
-            self.schedule, queries, block_w=self.block_w,
-            interpret=self.interpret,
-        )
+        if self.precision == "compact":
+            hits, visits = ops.pyramid_scan_compact(
+                self.qschedule, queries, block_w=self.block_w,
+                interpret=self.interpret,
+            )
+        else:
+            hits, visits = ops.pyramid_scan(
+                self.schedule, queries, block_w=self.block_w,
+                interpret=self.interpret,
+            )
         return np.asarray(hits), np.asarray(visits), 1
 
 
@@ -223,12 +242,14 @@ class PallasBackend:
     "serve",
     structures=ALL_STRUCTURES,
     artifact="schedule",
-    doc="batching SpatialServer: LRU cache + dedupe + vmap/pmap fan-out",
+    doc="batching SpatialServer: LRU cache + dedupe + vmap/pmap fan-out; "
+        "precision='compact' serves the quantized tile form",
 )
 class ServeBackend:
     def __init__(self, artifacts, *, query_block: int = 16,
                  cache_size: int = 4096, block_w: int = 128,
-                 interpret=None):
+                 interpret=None, precision: str = "float32"):
+        _check_precision(precision)
         # Imported here: launch.spatial_serve itself builds on the index
         # package's kernel API, keep the layers acyclic at import time.
         from repro.launch.spatial_serve import SpatialServer
@@ -239,6 +260,8 @@ class ServeBackend:
             cache_size=cache_size,
             block_w=block_w,
             interpret=interpret,
+            precision=precision,
+            quantized=(artifacts.quantized if precision == "compact" else None),
         )
 
     def region(self, queries: np.ndarray):

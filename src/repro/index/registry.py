@@ -6,6 +6,12 @@ artifact they lower — the pointer tree, the ``FlatTree``, or the
 ``LevelSchedule``.  The façade consults :func:`get_backend` at build time
 and :func:`advertised_pairs` is the single source of truth the parity
 matrix test sweeps (tests/test_index_api.py).
+
+Backends that accept ``precision="compact"`` (pallas, serve) additionally
+pull the QUANTIZED lowering — the conservative uint16 tile form of the
+schedule (DESIGN.md §7) — via ``BuildArtifacts.quantized``; like every
+lowering it is computed once and cached, so float32 and compact engines
+over the same build share one quantization.
 """
 
 from __future__ import annotations

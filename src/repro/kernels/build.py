@@ -1,0 +1,313 @@
+"""Pallas TPU kernel: device-resident bulk build of the mqr group pyramid.
+
+The host build path (``core/mqrtree.py`` insertion, then ``flatten`` +
+``level_schedule``) is per-object Python and dominates end-to-end time for
+large n; ``core/bulk.py`` already phrases the canonical mqr tree as a
+level-by-level centroid-quadrant fixed point in pure jnp.  This module
+computes that same fixed point ON DEVICE and emits the
+:class:`repro.core.flat.LevelSchedule` arrays the fused region-search
+kernel consumes directly — no host pointer tree, no ``flatten()`` on the
+hot build path (DESIGN.md §7).
+
+Two engines, bit-identical outputs:
+
+* ``engine="pallas"`` — ONE ``pallas_call`` with ``grid=(levels,)``.  The
+  object MBRs stay VMEM-resident coordinate-major for the whole build; per
+  level the kernel (a) subdivides each multi-member group by the
+  branch-free Fig. 2 quadrant select of ``bulk.quad_code``, (b) densifies
+  the new ``parent*5+quad`` keys with a presence-mask + prefix-sum rank
+  (identical numbering to ``bulk._densify``'s sort-based ranks, because
+  both assign dense ids in ascending key order), and (c) computes each
+  group's enclosing MBR as a segment min/max over ``block_n``-object tiles
+  (one-hot select + tile reduce).  Group-of / slot-MBR / parent rows are
+  emitted level by level straight into the schedule layout.
+* ``engine="jnp"`` — ``bulk.build_pyramid`` (the parity oracle) plus a
+  vectorized scatter for the parent map, all jit'd; this is also the
+  large-n path, since the kernel holds the whole object set in VMEM and is
+  therefore sized for VMEM-scale n (DESIGN.md §7).
+
+Both produce a schedule bit-identical to the host
+``flat.pyramid_schedule(bulk.build_pyramid(...))`` lowering
+(tests/test_device_build.py), so the fused scan's hit sets and per-level
+access counts are unchanged — only where the build runs moves.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import bulk
+from repro.core.flat import LevelSchedule
+
+# Above this the whole-set VMEM residency of the build kernel stops making
+# sense (objects, bounds, and the 5x key space all live on chip); the
+# ``auto`` engine falls back to the jit'd jnp fixed point.
+PALLAS_BUILD_MAX_N = 4096
+
+
+def _build_kernel(
+    mbr_ref,      # (4, W) f32 — object MBRs coordinate-major, resident
+    gof_ref,      # out (1, W) i32 — group id per object at this level
+    mbr_out_ref,  # out (1, 4, W) f32 — slot MBRs of this level
+    par_out_ref,  # out (1, W) i32 — parent slot of each slot
+    gid_ref,      # scratch (1, W) i32 — current-level group ids
+    prev_ref,     # scratch (1, W) i32 — previous-level group ids
+    bounds_ref,   # scratch (4, W) f32 — per-slot MBRs (segment min/max)
+    counts_ref,   # scratch (1, W) f32 — per-slot member counts
+    *,
+    n: int,
+    width: int,
+    block_n: int,
+    onehot_gather: bool,
+):
+    l = pl.program_id(0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, width), 1)[0]  # (W,)
+    valid = lane < n
+    n_tiles = width // block_n
+
+    cx = (mbr_ref[0, :] + mbr_ref[2, :]) * 0.5  # (W,) object centroids
+    cy = (mbr_ref[1, :] + mbr_ref[3, :]) * 0.5
+
+    @pl.when(l == 0)
+    def _root():
+        gid_ref[...] = jnp.zeros((1, width), jnp.int32)
+        prev_ref[...] = jnp.zeros((1, width), jnp.int32)
+
+    @pl.when(l > 0)
+    def _subdivide():
+        # Level l-1 state is still in scratch: derive level-l group ids.
+        gid = gid_ref[0, :]
+        # Empty slots carry +/-inf sentinels; members only ever gather
+        # their own (non-empty, finite) group, so zero the empties to keep
+        # 0*inf NaNs out of the one-hot matmul.
+        safe = jnp.where(counts_ref[...] > 0.0, bounds_ref[...], 0.0)
+        if onehot_gather:
+            # MXU path: per-object group box/count via one-hot matmuls
+            # over block_n-object tiles.
+            gb_tiles, cnt_tiles = [], []
+            for t in range(n_tiles):
+                sl = slice(t * block_n, (t + 1) * block_n)
+                oh = (
+                    jax.lax.broadcasted_iota(jnp.int32, (block_n, width), 1)
+                    == gid[sl][:, None]
+                ).astype(jnp.float32)
+                gb_tiles.append(
+                    jnp.dot(oh, safe.T, preferred_element_type=jnp.float32).T
+                )
+                cnt_tiles.append(jnp.dot(oh, counts_ref[0, :]))
+            gb = jnp.concatenate(gb_tiles, axis=1)    # (4, W)
+            cnt = jnp.concatenate(cnt_tiles)          # (W,)
+        else:
+            gb = jnp.take(safe, gid, axis=1)          # (4, W)
+            cnt = jnp.take(counts_ref[0, :], gid)     # (W,)
+        gcx = (gb[0] + gb[2]) * 0.5
+        gcy = (gb[1] + gb[3]) * 0.5
+        quad = bulk.quad_code(cx, cy, gcx, gcy)
+        # Same key rule as bulk.build_pyramid: singletons keep their slot
+        # ("quad 0" of their own group); keys stay unique per group.
+        key = jnp.where(cnt > 1.5, gid * 5 + quad, gid * 5)
+        key = jnp.where(valid, key, 0)
+        # Densify: presence mask over the 5W key space, then prefix-sum
+        # ranks — ascending-key numbering, exactly bulk._densify's.
+        kspace = 5 * width
+        pres = jnp.zeros((kspace,), jnp.float32)
+        for t in range(n_tiles):
+            sl = slice(t * block_n, (t + 1) * block_n)
+            oh5 = (
+                jax.lax.broadcasted_iota(jnp.int32, (block_n, kspace), 1)
+                == key[sl][:, None]
+            ) & valid[sl][:, None]
+            pres = jnp.maximum(pres, oh5.astype(jnp.float32).max(axis=0))
+        rank = jnp.cumsum(pres) - 1.0  # (5W,) f32; exact for n < 2**24
+        if onehot_gather:
+            gid_tiles = []
+            for t in range(n_tiles):
+                sl = slice(t * block_n, (t + 1) * block_n)
+                oh5 = (
+                    jax.lax.broadcasted_iota(jnp.int32, (block_n, kspace), 1)
+                    == key[sl][:, None]
+                ).astype(jnp.float32)
+                gid_tiles.append(jnp.dot(oh5, rank).astype(jnp.int32))
+            new_gid = jnp.concatenate(gid_tiles)
+        else:
+            new_gid = jnp.take(rank, key).astype(jnp.int32)
+        prev_ref[...] = gid_ref[...]
+        gid_ref[0, :] = jnp.where(valid, new_gid, 0)
+
+    # Segment min/max for the CURRENT level's groups, block_n objects at a
+    # time (the "VMEM-resident tiles" of the level fixed point).
+    bounds_ref[0, :] = jnp.full((width,), jnp.inf, jnp.float32)
+    bounds_ref[1, :] = jnp.full((width,), jnp.inf, jnp.float32)
+    bounds_ref[2, :] = jnp.full((width,), -jnp.inf, jnp.float32)
+    bounds_ref[3, :] = jnp.full((width,), -jnp.inf, jnp.float32)
+    counts_ref[...] = jnp.zeros((1, width), jnp.float32)
+    par_acc = jnp.zeros((width,), jnp.float32)
+    gid = gid_ref[0, :]
+    prev = prev_ref[0, :]
+    for t in range(n_tiles):
+        sl = slice(t * block_n, (t + 1) * block_n)
+        oh = (
+            jax.lax.broadcasted_iota(jnp.int32, (block_n, width), 1)
+            == gid[sl][:, None]
+        ) & valid[sl][:, None]
+        for c, red, fill in ((0, jnp.min, jnp.inf), (1, jnp.min, jnp.inf),
+                             (2, jnp.max, -jnp.inf), (3, jnp.max, -jnp.inf)):
+            part = red(
+                jnp.where(oh, mbr_ref[c, sl][:, None], fill), axis=0
+            )
+            bounds_ref[c, :] = (
+                jnp.minimum(bounds_ref[c, :], part)
+                if red is jnp.min
+                else jnp.maximum(bounds_ref[c, :], part)
+            )
+        counts_ref[0, :] = counts_ref[0, :] + oh.astype(jnp.float32).sum(axis=0)
+        # parent[slot of member] = member's previous-level gid (groups
+        # nest, so every member agrees); max-reduce the (prev+1) tags.
+        par_acc = jnp.maximum(
+            par_acc,
+            jnp.where(oh, (prev[sl] + 1).astype(jnp.float32)[:, None],
+                      0.0).max(axis=0),
+        )
+
+    gof_ref[0, :] = gid
+    mbr_out_ref[0] = bounds_ref[...]
+    parent = jnp.maximum(par_acc, 1.0).astype(jnp.int32) - 1
+    par_out_ref[0, :] = jnp.where(l > 0, parent, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("levels", "block_n", "interpret", "onehot_gather")
+)
+def build_levels_pallas(
+    mbrs: jnp.ndarray,  # (n, 4) f32
+    *,
+    levels: int,
+    block_n: int = 128,
+    interpret: bool = False,
+    onehot_gather: bool | None = None,
+):
+    """One-launch device build.  Returns ``(group_of (L, n) i32,
+    mbr_cm (L, 4, n) f32, parent (L, n) i32, n_real (L,) i32)`` — exactly
+    the level arrays of ``flat.pyramid_schedule``."""
+    mbrs = jnp.asarray(mbrs, jnp.float32)
+    n = mbrs.shape[0]
+    width = max(((n + block_n - 1) // block_n) * block_n, block_n)
+    if onehot_gather is None:
+        onehot_gather = not interpret  # same policy as pyramid_scan
+    mbr_cm_in = jnp.concatenate(
+        [mbrs.T, jnp.zeros((4, width - n), jnp.float32)], axis=1
+    )  # (4, W); padding is masked out of every reduction by `valid`
+    kernel = functools.partial(
+        _build_kernel,
+        n=n,
+        width=width,
+        block_n=block_n,
+        onehot_gather=onehot_gather,
+    )
+    group_of, mbr_cm, parent = pl.pallas_call(
+        kernel,
+        grid=(levels,),
+        in_specs=[pl.BlockSpec((4, width), lambda l: (0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, width), lambda l: (l, 0)),
+            pl.BlockSpec((1, 4, width), lambda l: (l, 0, 0)),
+            pl.BlockSpec((1, width), lambda l: (l, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((levels, width), jnp.int32),
+            jax.ShapeDtypeStruct((levels, 4, width), jnp.float32),
+            jax.ShapeDtypeStruct((levels, width), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, width), jnp.int32),
+            pltpu.VMEM((1, width), jnp.int32),
+            pltpu.VMEM((4, width), jnp.float32),
+            pltpu.VMEM((1, width), jnp.float32),
+        ],
+        interpret=interpret,
+    )(mbr_cm_in)
+    group_of = group_of[:, :n]
+    n_real = group_of.max(axis=1) + 1
+    return group_of, mbr_cm[:, :, :n], parent[:, :n], n_real
+
+
+@functools.partial(jax.jit, static_argnames=("levels",))
+def build_levels_jnp(mbrs: jnp.ndarray, *, levels: int):
+    """Pure-jnp device build (large-n engine; parity oracle wiring): the
+    ``bulk.build_pyramid`` fixed point plus a vectorized parent scatter.
+    Same return contract as :func:`build_levels_pallas`."""
+    mbrs = jnp.asarray(mbrs, jnp.float32)
+    pyr = bulk.build_pyramid(mbrs, levels)
+    group_of = pyr.group_of                          # (L, n)
+    n = group_of.shape[1]
+    mbr_cm = jnp.transpose(pyr.group_mbr, (0, 2, 1))  # (L, 4, n)
+    parent = jnp.zeros((levels, n), jnp.int32)
+    if levels > 1:
+        rows = jnp.broadcast_to(
+            jnp.arange(1, levels)[:, None], (levels - 1, n)
+        )
+        parent = parent.at[rows, group_of[1:]].set(group_of[:-1])
+    n_real = group_of.max(axis=1) + 1
+    return group_of, mbr_cm, parent, n_real
+
+
+def device_schedule(
+    mbrs,
+    *,
+    levels: int | None = None,
+    engine: str = "auto",
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> LevelSchedule:
+    """Device-resident bulk build straight to a :class:`LevelSchedule`.
+
+    ``engine="auto"`` uses the Pallas kernel when it would compile natively
+    (on-TPU) and the object set fits its VMEM residency
+    (:data:`PALLAS_BUILD_MAX_N`), the jit'd jnp fixed point otherwise —
+    both emit bit-identical schedules.  The returned schedule is the same
+    object the host ``flat.pyramid_schedule`` path produces, so every
+    backend (host/lax/pallas/serve) serves it unchanged.
+    """
+    from . import ops  # runtime import: ops imports this module at load
+
+    mbrs_f32 = np.asarray(mbrs, np.float32).reshape(-1, 4)
+    n = mbrs_f32.shape[0]
+    if n == 0:
+        raise ValueError("device_schedule needs at least one MBR")
+    if levels is None:
+        levels = bulk.default_levels(n)
+    if interpret is None:
+        interpret = ops.interpret_default()
+    if engine == "auto":
+        engine = "pallas" if (not interpret and n <= PALLAS_BUILD_MAX_N) else "jnp"
+    if engine == "pallas":
+        group_of, mbr_cm, parent, n_real = build_levels_pallas(
+            jnp.asarray(mbrs_f32), levels=levels, block_n=block_n,
+            interpret=interpret,
+        )
+    elif engine == "jnp":
+        group_of, mbr_cm, parent, n_real = build_levels_jnp(
+            jnp.asarray(mbrs_f32), levels=levels
+        )
+    else:
+        raise ValueError(f"unknown build engine {engine!r}")
+    group_of = np.asarray(group_of)
+    return LevelSchedule(
+        mbr_cm=np.ascontiguousarray(np.asarray(mbr_cm)),
+        parent=np.asarray(parent),
+        n_real=np.asarray(n_real, np.int32),
+        obj_mbr=mbrs_f32,
+        obj_level=np.full((n,), levels - 1, np.int32),
+        obj_slot=group_of[levels - 1].astype(np.int32),
+        obj_id=np.arange(n, dtype=np.int32),
+        n_objects=n,
+        root_unconditional=False,
+        test_object_mbr=False,
+    )

@@ -13,12 +13,15 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .build import device_schedule as _device_schedule
 from .flash_attention import flash_attention as _flash
 from .mbr_scan import mbr_scan as _mbr_scan
 from .mqr_sparse_attention import mqr_sparse_attention as _sparse
-from .pyramid_scan import _fused_search
+from .pyramid_scan import _fused_search, _fused_search_compact
 from .pyramid_scan import per_level_region_search as _per_level
 from .pyramid_scan import pyramid_scan as _pyramid_scan
+from .pyramid_scan import pyramid_scan_compact as _pyramid_scan_compact
+from .quantize import quantize_schedule as _quantize_schedule
 from .rmsnorm import rmsnorm as _rmsnorm
 
 
@@ -66,6 +69,72 @@ def fused_search(
         block_w=block_w,
         root_unconditional=root_unconditional,
         test_object_mbr=test_object_mbr,
+        interpret=interpret,
+    )
+
+
+def device_schedule(mbrs, *, levels=None, engine: str = "auto",
+                    block_n: int = 128, interpret: bool | None = None):
+    """Device-resident bulk build straight to a ``LevelSchedule`` — no
+    host pointer tree, no ``flatten()`` (DESIGN.md §7).  ``engine="auto"``
+    picks the one-launch Pallas build kernel when compiling natively and
+    the object set fits its VMEM residency, the jit'd jnp fixed point
+    otherwise; both are bit-identical to the host
+    ``flat.pyramid_schedule`` lowering."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _device_schedule(
+        mbrs, levels=levels, engine=engine, block_n=block_n,
+        interpret=interpret,
+    )
+
+
+def quantize_schedule(schedule, *, engine: str = "auto", block_w: int = 128,
+                      interpret: bool | None = None):
+    """Lower a ``LevelSchedule`` to its conservative uint16 tile form
+    (``QuantizedSchedule``, DESIGN.md §7) for the compact fused scan."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _quantize_schedule(
+        schedule, engine=engine, block_w=block_w, interpret=interpret
+    )
+
+
+def pyramid_scan_compact(qsched, queries, *, block_w: int = 128,
+                         interpret: bool | None = None):
+    """Fused region search over uint16 tiles + exact float32 confirming
+    pass: hit sets bit-identical to :func:`pyramid_scan` at ~half the
+    streamed bytes per query; ``visits`` reports the compact sweep's own
+    conservative access counts (DESIGN.md §7)."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _pyramid_scan_compact(
+        qsched, queries, block_w=block_w, interpret=interpret
+    )
+
+
+def fused_search_compact(
+    queries, mbr_q, parent_q, confirm_mbr, obj_level, obj_slot, obj_id,
+    origin, inv_cell,
+    *,
+    n_objects: int,
+    cells: int,
+    block_w: int = 128,
+    root_unconditional: bool = True,
+    interpret: bool | None = None,
+):
+    """Array-level public entry of the compact sweep (the ``precision=
+    "compact"`` analogue of :func:`fused_search`), ``vmap``/``pmap``-able
+    over query blocks with the quantized schedule arrays held constant."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _fused_search_compact(
+        queries, mbr_q, parent_q, confirm_mbr, obj_level, obj_slot, obj_id,
+        origin, inv_cell,
+        n_objects=n_objects,
+        cells=cells,
+        block_w=block_w,
+        root_unconditional=root_unconditional,
         interpret=interpret,
     )
 

@@ -36,11 +36,23 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.flat import NEVER_MBR, LevelSchedule, _overlaps
+from repro.core.flat import (
+    NEVER_MBR,
+    Q_NEVER_MBR,
+    LevelSchedule,
+    QuantizedSchedule,
+    _overlaps,
+)
 
 
 def _overlap_tile(q_ref, mbr_tile):
-    """(Q, 4) resident queries vs (4, BW) coordinate-major tile -> (Q, BW)."""
+    """(Q, 4) resident queries vs (4, BW) coordinate-major tile -> (Q, BW).
+
+    Works for float32 tiles and for uint16 compact tiles (tiles are cast
+    to the query dtype — int32 for quantized sweeps — after the VMEM
+    load, so HBM only ever streams the narrow form)."""
+    if mbr_tile.dtype != q_ref.dtype:
+        mbr_tile = mbr_tile.astype(q_ref.dtype)
     lx, ly, hx, hy = mbr_tile[0, :], mbr_tile[1, :], mbr_tile[2, :], mbr_tile[3, :]
     qlx = q_ref[:, 0][:, None]
     qly = q_ref[:, 1][:, None]
@@ -76,15 +88,16 @@ def _sweep_kernel(
 
     ov = _overlap_tile(q_ref, mbr_ref[0])  # (Q, BW)
 
+    parent_row = parent_ref[0].astype(jnp.int32)  # uint16 on the compact path
     if onehot_gather:
         # TPU path: parent gather as a one-hot matmul on the MXU,
         # onehot[p, j] = (p == parent[j]) — no lane gather needed.
         iota = jax.lax.broadcasted_iota(jnp.int32, (width, block_w), 0)
-        onehot = (iota == parent_ref[0][None, :]).astype(jnp.float32)
+        onehot = (iota == parent_row[None, :]).astype(jnp.float32)
         pa = jnp.dot(prev_ref[...], onehot, preferred_element_type=jnp.float32)
     else:
         # Interpreter path: O(Q·BW) column gather instead of O(Q·W·BW).
-        pa = jnp.take(prev_ref[...], parent_ref[0], axis=1)
+        pa = jnp.take(prev_ref[...], parent_row, axis=1)
     parent_active = pa > 0.5
 
     if root_unconditional:
@@ -121,9 +134,14 @@ def level_sweep(
     q = queries.shape[0]
     pad = (-w) % block_w
     if pad:
+        never = (
+            NEVER_MBR
+            if jnp.issubdtype(mbr_cm.dtype, jnp.floating)
+            else Q_NEVER_MBR.astype(mbr_cm.dtype)
+        )
         mbr_cm = jnp.concatenate(
             [mbr_cm,
-             jnp.broadcast_to(jnp.asarray(NEVER_MBR)[None, :, None],
+             jnp.broadcast_to(jnp.asarray(never)[None, :, None],
                               (levels, 4, pad))],
             axis=2,
         )
@@ -225,6 +243,80 @@ def pyramid_scan(
         block_w=block_w,
         root_unconditional=schedule.root_unconditional,
         test_object_mbr=schedule.test_object_mbr,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_objects", "cells", "block_w", "root_unconditional", "interpret",
+    ),
+)
+def _fused_search_compact(
+    queries, mbr_q, parent_q, confirm_mbr, obj_level, obj_slot, obj_id,
+    origin, inv_cell,
+    *,
+    n_objects: int,
+    cells: int,
+    block_w: int,
+    root_unconditional: bool,
+    interpret: bool,
+):
+    """Fused sweep over uint16 tiles + exact float32 confirming pass.
+
+    Queries are quantized OUTWARD onto the schedule's grid (lo floor, hi
+    ceil, clipped to the domain — node boxes never extend past it), so
+    the integer sweep's survivors are a superset of the exact sweep's.
+    The confirming pass intersects them with the exact ``confirm_mbr``
+    overlap, which by MBR nesting implies the full exact ancestor chain:
+    hit sets come out bit-identical to :func:`_fused_search`
+    (tests/test_quantized.py).  ``visits`` counts the accesses this path
+    actually performed — the conservative sweep may touch slightly more
+    nodes per level than the exact one (DESIGN.md §7).
+    """
+    t = (queries - origin[None, :]) * inv_cell[None, :]
+    qq = jnp.concatenate([jnp.floor(t[:, :2]), jnp.ceil(t[:, 2:])], axis=1)
+    qq = jnp.clip(qq, 0.0, float(cells)).astype(jnp.int32)
+    act = level_sweep(
+        qq, mbr_q, parent_q,
+        block_w=block_w,
+        root_unconditional=root_unconditional,
+        interpret=interpret,
+    )  # (L, Q, W) candidate mask, superset of the exact active mask
+    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))  # (Q, L)
+    cand = jnp.transpose(act[obj_level, :, obj_slot])          # (Q, E)
+    hit = cand & _overlaps(confirm_mbr[None, :, :], queries[:, None, :])
+    q = queries.shape[0]
+    hits = jnp.zeros((q, max(n_objects, 1)), jnp.bool_)
+    hits = hits.at[:, obj_id].max(hit)
+    return hits, visits
+
+
+def pyramid_scan_compact(
+    qsched: QuantizedSchedule,
+    queries,
+    *,
+    block_w: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused region search over a :class:`QuantizedSchedule`: half the
+    streamed bytes per tile, hit sets bit-identical to the float32 path;
+    ``visits`` reports the compact sweep's own (conservative) accesses."""
+    return _fused_search_compact(
+        jnp.asarray(queries, jnp.float32),
+        jnp.asarray(qsched.mbr_q),
+        jnp.asarray(qsched.parent_q),
+        jnp.asarray(qsched.confirm_mbr),
+        jnp.asarray(qsched.base.obj_level),
+        jnp.asarray(qsched.base.obj_slot),
+        jnp.asarray(qsched.base.obj_id),
+        jnp.asarray(qsched.origin),
+        jnp.asarray(qsched.inv_cell),
+        n_objects=qsched.n_objects,
+        cells=qsched.cells,
+        block_w=block_w,
+        root_unconditional=qsched.base.root_unconditional,
         interpret=interpret,
     )
 

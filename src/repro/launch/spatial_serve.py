@@ -57,6 +57,12 @@ class SpatialServer:
       block_w: kernel lane-tile width.
       interpret: run the Pallas kernel in interpreter mode (None = auto:
         interpret off TPU, compile on TPU — same policy as ``kernels.ops``).
+      precision: ``"float32"`` streams exact tiles; ``"compact"`` streams
+        the conservatively quantized uint16 tile form at half the bytes
+        per query with an exact confirming pass — hit sets are identical,
+        visit counts are the compact sweep's own (DESIGN.md §7).
+      quantized: optionally a pre-built ``QuantizedSchedule`` for
+        ``precision="compact"`` (quantized here when omitted).
     """
 
     def __init__(
@@ -67,33 +73,61 @@ class SpatialServer:
         cache_size: int = 4096,
         block_w: int = 128,
         interpret: bool | None = None,
+        precision: str = "float32",
+        quantized=None,
     ):
         if interpret is None:
             interpret = ops.interpret_default()
+        if precision not in ("float32", "compact"):
+            raise ValueError(f"unknown precision {precision!r}")
         self.schedule = schedule
+        self.precision = precision
         self.query_block = int(query_block)
         self.cache_size = int(cache_size)
         self.stats = ServeStats()
         self._cache: "OrderedDict[bytes, Tuple[np.ndarray, np.ndarray]]" = (
             OrderedDict()
         )
-        self._arrays = (
-            jnp.asarray(schedule.mbr_cm),
-            jnp.asarray(schedule.parent),
-            jnp.asarray(schedule.obj_mbr),
-            jnp.asarray(schedule.obj_level),
-            jnp.asarray(schedule.obj_slot),
-            jnp.asarray(schedule.obj_id),
-        )
-        inner = functools.partial(
-            ops.fused_search,
-            n_objects=schedule.n_objects,
-            block_w=block_w,
-            root_unconditional=schedule.root_unconditional,
-            test_object_mbr=schedule.test_object_mbr,
-            interpret=interpret,
-        )
-        batch_axes = (0,) + (None,) * 6
+        if precision == "compact":
+            qs = quantized
+            if qs is None:
+                qs = ops.quantize_schedule(schedule, interpret=interpret)
+            self._arrays = (
+                jnp.asarray(qs.mbr_q),
+                jnp.asarray(qs.parent_q),
+                jnp.asarray(qs.confirm_mbr),
+                jnp.asarray(schedule.obj_level),
+                jnp.asarray(schedule.obj_slot),
+                jnp.asarray(schedule.obj_id),
+                jnp.asarray(qs.origin),
+                jnp.asarray(qs.inv_cell),
+            )
+            inner = functools.partial(
+                ops.fused_search_compact,
+                n_objects=schedule.n_objects,
+                cells=qs.cells,
+                block_w=block_w,
+                root_unconditional=schedule.root_unconditional,
+                interpret=interpret,
+            )
+        else:
+            self._arrays = (
+                jnp.asarray(schedule.mbr_cm),
+                jnp.asarray(schedule.parent),
+                jnp.asarray(schedule.obj_mbr),
+                jnp.asarray(schedule.obj_level),
+                jnp.asarray(schedule.obj_slot),
+                jnp.asarray(schedule.obj_id),
+            )
+            inner = functools.partial(
+                ops.fused_search,
+                n_objects=schedule.n_objects,
+                block_w=block_w,
+                root_unconditional=schedule.root_unconditional,
+                test_object_mbr=schedule.test_object_mbr,
+                interpret=interpret,
+            )
+        batch_axes = (0,) + (None,) * len(self._arrays)
         self._vmapped = jax.jit(jax.vmap(inner, in_axes=batch_axes))
         self._pmapped = None
         if jax.device_count() > 1:

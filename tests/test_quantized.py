@@ -1,0 +1,192 @@
+"""Compact uint16 tiles: conservative by construction, exact after confirm.
+
+DESIGN.md §7's contract: the quantized sweep prunes a SUPERSET of the
+exact survivors (outward rounding can only widen boxes), and the exact
+float32 confirming pass makes the final hit sets bit-identical to the
+float32 path — across structures, backends, dataset shapes, and (via
+hypothesis) adversarial coordinate distributions.  Visit counts are the
+compact sweep's own: always >= the exact path's, never fewer.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import datasets, flat, mqrtree, rtree
+from repro.core.flat import CELLS, Q_NEVER_MBR
+from repro.index import SpatialIndex
+from repro.kernels import ops
+from repro.kernels import quantize as kq
+
+DATASETS = {
+    "uniform_squares": lambda: datasets.uniform_squares(300, seed=5),
+    "uniform_points": lambda: datasets.uniform_points(256, seed=2),
+    "exponential_squares": lambda: datasets.exponential_squares(250, seed=9),
+}
+
+
+def _overlap_np(a, b):
+    return (
+        (a[..., 0] <= b[..., 2])
+        & (b[..., 0] <= a[..., 2])
+        & (a[..., 1] <= b[..., 3])
+        & (b[..., 1] <= a[..., 3])
+    )
+
+
+@pytest.mark.parametrize("name", sorted(DATASETS))
+@pytest.mark.parametrize("structure", ["mqr", "rtree", "pyramid"])
+def test_compact_hits_bit_identical(name, structure):
+    data = DATASETS[name]()
+    qs = datasets.region_queries(data, 6, seed=6)
+    idx = SpatialIndex.build(data, structure=structure, backend="pallas")
+    ref = idx.region(qs)
+    cmp_ = idx.with_backend("pallas", precision="compact").region(qs)
+    assert np.array_equal(cmp_.hits, ref.hits), f"{structure} on {name}"
+    # conservative sweep: never fewer accesses than the exact sweep
+    assert (cmp_.visits_per_level >= ref.visits_per_level).all()
+
+
+def test_outward_rounding_contains_exact_boxes():
+    """Every finite quantized box contains its exact box on the grid:
+    lo cells round down, hi cells round up."""
+    data = DATASETS["uniform_squares"]()
+    sched = flat.level_schedule(flat.flatten(mqrtree.build(data)))
+    qsched = ops.quantize_schedule(sched)
+    exact = (sched.mbr_cm - qsched.origin[None, :, None]) \
+        * qsched.inv_cell[None, :, None]
+    q = qsched.mbr_q.astype(np.float64)
+    finite = np.isfinite(sched.mbr_cm)
+    lo = finite[:, :2]
+    assert (q[:, :2][lo] <= exact[:, :2][lo] + 1e-6).all()
+    hi = finite[:, 2:]
+    assert (q[:, 2:][hi] >= exact[:, 2:][hi] - 1e-6).all()
+
+
+def test_padded_slots_quantize_to_never_sentinel():
+    data = DATASETS["uniform_squares"]()
+    sched = flat.level_schedule(flat.flatten(mqrtree.build(data)))
+    qsched = ops.quantize_schedule(sched)
+    padded = ~np.isfinite(sched.mbr_cm[:, 0, :])  # lo_x == +inf
+    assert padded.any()
+    for c in range(4):
+        assert (qsched.mbr_q[:, c, :][padded] == Q_NEVER_MBR[c]).all()
+    assert Q_NEVER_MBR[0] == CELLS + 1  # lo beyond every clipped query hi
+
+
+def test_quantize_kernel_matches_jnp():
+    data = DATASETS["exponential_squares"]()
+    sched = ops.device_schedule(data)
+    origin, inv_cell = kq.grid_params(sched)
+    a = kq.quantize_cm_pallas(
+        sched.mbr_cm, jnp.asarray(origin), jnp.asarray(inv_cell),
+        interpret=True,
+    )
+    b = kq.quantize_cm_jnp(
+        sched.mbr_cm, jnp.asarray(origin), jnp.asarray(inv_cell)
+    )
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_wide_schedule_falls_back_to_int32_parents():
+    """precision="compact" must not fail in the large-n regime it exists
+    for: pyramid schedules wider than uint16 slots keep int32 parents
+    (tiles stay uint16, bytes ratio 0.6 instead of 0.5)."""
+    n = (1 << 16) + 8
+    data = datasets.uniform_points(n, seed=3)
+    sched = ops.device_schedule(data, engine="jnp")
+    assert sched.width == n > np.iinfo(np.uint16).max
+    qsched = ops.quantize_schedule(sched, engine="jnp")
+    assert qsched.parent_q.dtype == np.int32
+    assert qsched.mbr_q.dtype == np.uint16
+    # and the narrow case still streams uint16 parents
+    narrow = ops.quantize_schedule(
+        ops.device_schedule(data[:512], engine="jnp"), engine="jnp"
+    )
+    assert narrow.parent_q.dtype == np.uint16
+
+
+def test_serve_compact_transparent():
+    """The batching server in compact precision returns the same hits as
+    the float32 fused scan, through dedupe, padding, and the LRU."""
+    data = DATASETS["uniform_squares"]()
+    sched = flat.level_schedule(flat.flatten(mqrtree.build(data)))
+    from repro.launch.spatial_serve import SpatialServer
+
+    server = SpatialServer(sched, query_block=4, cache_size=64,
+                           precision="compact")
+    qs = datasets.region_queries(data, 6, seed=14)
+    stream = np.concatenate([qs, qs[:3]])
+    hits, visits = server.search(stream)
+    ref_hits, _ = ops.pyramid_scan(sched, stream)
+    assert np.array_equal(hits, np.asarray(ref_hits))
+    # second pass served from cache, no extra launches
+    launches = server.stats.kernel_launches
+    hits2, _ = server.search(qs)
+    assert np.array_equal(hits2, hits[:6])
+    assert server.stats.kernel_launches == launches
+
+
+def test_facade_stats_count_compact_accesses():
+    data = DATASETS["uniform_squares"]()
+    qs = datasets.region_queries(data, 6, seed=6)
+    idx = SpatialIndex.build(
+        data, structure="pyramid", backend="pallas", build="device",
+        precision="compact",
+    )
+    res = idx.region(qs)
+    # the ledger records what the compact sweep actually fetched
+    assert idx.stats.node_accesses == int(res.visits_per_level.sum())
+    assert idx.stats.launches == 1
+
+
+# ---------------------------------------------------------------------------
+# Property: conservative rounding never drops a true hit
+# ---------------------------------------------------------------------------
+
+pytest.importorskip("hypothesis", reason="pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+_coord = st.floats(
+    min_value=-1e6, max_value=1e6, allow_nan=False, allow_infinity=False,
+    width=32,
+)
+_rect = st.tuples(_coord, _coord, _coord, _coord).map(
+    lambda t: (min(t[0], t[2]), min(t[1], t[3]),
+               max(t[0], t[2]), max(t[1], t[3]))
+)
+
+# Fixed sizes so the jitted scans compile once across examples.
+_N_OBJ, _N_Q = 16, 4
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rects=st.lists(_rect, min_size=_N_OBJ, max_size=_N_OBJ),
+    queries=st.lists(_rect, min_size=_N_Q, max_size=_N_Q),
+    builder=st.sampled_from(["mqr", "rtree"]),
+)
+def test_conservative_rounding_never_drops_a_hit(rects, queries, builder):
+    """For arbitrary finite geometry (huge magnitudes, degenerate/point
+    boxes, co-located objects), the compact pipeline's hit sets equal
+    brute-force float32 overlap — the quantized sweep may widen boxes by
+    a grid cell but the confirming pass restores exactness, and no true
+    hit is ever dropped."""
+    data = np.asarray(rects, np.float64)
+    qs = np.asarray(queries, np.float32)
+    build = mqrtree.build if builder == "mqr" else rtree.build
+    sched = flat.level_schedule(flat.flatten(build(data)))
+    qsched = ops.quantize_schedule(sched)
+    hits_f, visits_f = ops.pyramid_scan(sched, qs)
+    hits_c, visits_c = ops.pyramid_scan_compact(qsched, qs)
+    hits_f, hits_c = np.asarray(hits_f), np.asarray(hits_c)
+    # never a dropped hit, and (after confirm) never a spurious one
+    assert np.array_equal(hits_c, hits_f)
+    # the exact semantics: brute-force float32 rectangle overlap
+    brute = _overlap_np(
+        np.asarray(sched.obj_mbr, np.float32)[None, :, :], qs[:, None, :]
+    )
+    expect = np.zeros_like(hits_f)
+    np.maximum.at(expect, (slice(None), sched.obj_id), brute)
+    assert np.array_equal(hits_f, expect)
+    assert (np.asarray(visits_c) >= np.asarray(visits_f)).all()
