@@ -229,6 +229,66 @@ def bench_index_api():
     ]
 
 
+def bench_live_update():
+    """Live-update subsystem (DESIGN.md §8): mutation throughput and the
+    query rent of an un-merged delta buffer.
+
+    Rows: inserts/sec and deletes/sec into the device-resident buffer,
+    region q/s at ~10% and ~50% buffer fill (the flat delta levels ride
+    the same fused launch), and q/s after the merge compacts everything
+    back into a clean base build (flush wall-time reported alongside).
+    """
+    from repro.index import SpatialIndex
+
+    n, capacity, n_q = (200, 64, 8) if TINY else (4000, 1024, 32)
+    data = datasets.uniform_squares(n, seed=1)
+    idx = SpatialIndex.build(
+        data, structure="pyramid", backend="pallas",
+        merge=dict(capacity=capacity, max_fill=1.0, max_tombstone_ratio=1.0),
+    )
+    qs = datasets.region_queries(data, n_q, seed=2)
+    rng = np.random.default_rng(3)
+    rows = []
+
+    b = max(capacity // 10, 1)
+    ins1 = datasets.uniform_squares(b, seed=4)
+    t0 = time.time()
+    idx.insert(ins1)
+    t_ins = time.time() - t0
+    rows.append((t_ins, {"impl": "live-insert", "batch": b,
+                         "inserts_per_sec": round(b / t_ins)}))
+
+    t10 = _timeit(lambda: idx.region(qs).hits, iters=3)
+    rows.append((t10, {"impl": "live-query-10pct-fill",
+                       "q/s": round(n_q / t10),
+                       "fill": round(idx._updates.fill, 2)}))
+
+    victims = rng.choice(
+        np.nonzero(idx._updates.alive)[0], size=b, replace=False
+    )
+    t0 = time.time()
+    idx.delete(victims)
+    t_del = time.time() - t0
+    rows.append((t_del, {"impl": "live-delete", "batch": b,
+                         "deletes_per_sec": round(b / t_del)}))
+
+    idx.insert(datasets.uniform_squares(int(capacity * 0.4), seed=5))
+    t50 = _timeit(lambda: idx.region(qs).hits, iters=3)
+    rows.append((t50, {"impl": "live-query-50pct-fill",
+                       "q/s": round(n_q / t50),
+                       "fill": round(idx._updates.fill, 2)}))
+
+    t0 = time.time()
+    idx.flush()
+    t_flush = time.time() - t0
+    tpf = _timeit(lambda: idx.region(qs).hits, iters=3)
+    rows.append((tpf, {"impl": "live-query-post-flush",
+                       "q/s": round(n_q / tpf),
+                       "flush_ms": round(t_flush * 1e3, 1),
+                       "n_live": idx.n_objects}))
+    return rows
+
+
 def bench_mqr_sparse_vs_dense_decode():
     """The paper's payoff on the KV cache: pruned vs full decode attention."""
     key = jax.random.PRNGKey(0)
@@ -268,5 +328,6 @@ JAX_BENCHES = {
     "kernel_pyramid_scan": bench_pyramid_scan,
     "kernel_compact_scan": bench_compact_scan,
     "index_api": bench_index_api,
+    "live_update": bench_live_update,
     "mqr_sparse_vs_dense_decode": bench_mqr_sparse_vs_dense_decode,
 }

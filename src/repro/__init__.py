@@ -10,6 +10,7 @@ _INDEX_EXPORTS = (
     "RegionResult",
     "KNNResult",
     "AccessStats",
+    "MergePolicy",
     "advertised_pairs",
 )
 

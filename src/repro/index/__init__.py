@@ -6,7 +6,11 @@ One build/query contract over every structure × backend path:
     idx = SpatialIndex.build(mbrs, structure="mqr", backend="pallas")
     idx.region(queries)   # RegionResult(hits, visits_per_level)
     idx.knn(points, k=8)  # KNNResult(ids, dists, visits)
+    gids = idx.insert(more_mbrs)   # live updates: delta buffer + merge
+    idx.delete(gids[:2])           # tombstones (DESIGN.md §8)
 """
+
+from repro.update import MergePolicy
 
 from .api import (
     STRUCTURES,
@@ -30,6 +34,7 @@ __all__ = [
     "BackendSpec",
     "BuildArtifacts",
     "KNNResult",
+    "MergePolicy",
     "RegionResult",
     "SpatialIndex",
     "advertised_pairs",

@@ -26,6 +26,15 @@ the pyramid's bulk fixed point on-accelerator, emitting the
 ``precision="compact"`` streams conservatively quantized uint16 MBR tiles
 through the fused sweep at half the bytes/query, with an exact float32
 confirming pass keeping hit sets bit-identical.
+
+Online mutation (DESIGN.md §8): :meth:`SpatialIndex.insert` /
+:meth:`delete` / :meth:`flush` route through the live-update subsystem
+(:mod:`repro.update`) — inserts land in a device-resident delta buffer
+swept by the same fused launch, deletes tombstone ids masked in the scan
+epilogue, and a merge policy decides when to compact into a fresh base
+build.  Object ids are global and append-only, so hit masks stay
+comparable (and bit-identical to the host mqr-insertion oracle) across
+mutations and merges.
 """
 
 from __future__ import annotations
@@ -45,6 +54,8 @@ STRUCTURES = ("mqr", "rtree", "pyramid")
 
 # Build-time options; everything else in **opts goes to the backend factory.
 _BUILD_OPTS = ("levels", "max_entries", "build")
+# Live-update options (structure-agnostic, consumed by the façade).
+_UPDATE_OPTS = ("capacity", "merge")
 
 
 # ---------------------------------------------------------------------------
@@ -56,14 +67,21 @@ _BUILD_OPTS = ("levels", "max_entries", "build")
 class RegionResult:
     """Result of a batched region (or point) search.
 
-    hits:             (Q, n_objects) bool object-overlap mask.
+    hits:             (Q, id_space) bool object-overlap mask — columns are
+                      GLOBAL object ids (equal to build positions until
+                      live updates begin; append-only afterwards, §8).
     visits_per_level: (Q, L) int32 — node accesses by tree level, the
                       paper's "disk accesses" broken down by depth.  Every
                       backend reports the identical numbers (DESIGN.md §6).
+                      Once live updates begin, columns past ``base_levels``
+                      are the delta buffer's flat-scan accesses.
+    base_levels:      levels belonging to the frozen base build; None for
+                      an index with no live-update state.
     """
 
     hits: np.ndarray
     visits_per_level: np.ndarray
+    base_levels: Optional[int] = None
 
     @property
     def visits(self) -> np.ndarray:
@@ -78,6 +96,16 @@ class RegionResult:
     def ids(self, i: int) -> np.ndarray:
         """Object ids found by query ``i`` (ascending)."""
         return np.nonzero(self.hits[i])[0]
+
+    @property
+    def delta_visits(self) -> np.ndarray:
+        """(Q,) delta-buffer accesses per query (all zero when the index
+        has no live-update state)."""
+        if self.base_levels is None:
+            return np.zeros((self.visits_per_level.shape[0],), np.int64)
+        return self.visits_per_level[:, self.base_levels:].sum(
+            axis=1, dtype=np.int64
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +138,11 @@ class AccessStats:
     launches: int = 0        # device dispatches (0 for the host backend)
     knn_queries: int = 0
     knn_rounds: int = 0      # expanding-radius region rounds issued
+    # live-update ledger (DESIGN.md §8)
+    inserts: int = 0
+    deletes: int = 0
+    flushes: int = 0         # merges (manual, policy, or overflow)
+    delta_accesses: int = 0  # node_accesses spent on delta-buffer levels
 
     def record(self, n_queries: int, accesses: int, launches: int) -> None:
         self.queries += int(n_queries)
@@ -239,11 +272,27 @@ class SpatialIndex:
                 f"backend {spec.name!r} does not serve structure "
                 f"{artifacts.structure!r} (serves: {sorted(spec.structures)})"
             )
-        self.artifacts = artifacts
+        self._artifacts = artifacts
         self.spec = spec
         self.stats = AccessStats()
         self._backend_opts = dict(backend_opts)
         self._backend = spec.factory(artifacts, **backend_opts)
+        # live-update state (DESIGN.md §8); created on first insert/delete.
+        # The log lives in a shared one-slot cell so `with_backend` twins
+        # observe mutations regardless of whether the first mutation
+        # happens before or after the twin is created.
+        self._policy = None            # MergePolicy override from build()
+        self._updates_cell = {"log": None}
+        self._live_engine = None
+        self._backend_base_epoch = 0   # base epoch self._backend was built at
+
+    @property
+    def _updates(self):
+        return self._updates_cell["log"]
+
+    @_updates.setter
+    def _updates(self, log):
+        self._updates_cell["log"] = log
 
     # -- construction --------------------------------------------------
     @classmethod
@@ -266,36 +315,89 @@ class SpatialIndex:
             DESIGN.md §7 — plus ``query_block``/``cache_size`` for
             serve), routed by key; an option the chosen structure or
             backend does not support raises ``TypeError`` rather than
-            being silently dropped.
+            being silently dropped.  Live-update options (DESIGN.md §8):
+            ``capacity`` (delta-buffer slots) and ``merge`` (a
+            ``repro.update.MergePolicy`` or kwargs dict) configure how
+            :meth:`insert`/:meth:`delete` buffer and when they compact.
         """
+        update_opts = {k: opts.pop(k) for k in list(opts) if k in _UPDATE_OPTS}
         build_opts = {k: v for k, v in opts.items() if k in _BUILD_OPTS}
         backend_opts = {k: v for k, v in opts.items() if k not in _BUILD_OPTS}
         artifacts = BuildArtifacts(structure, mbrs, **build_opts)
-        return cls(artifacts, get_backend(backend), **backend_opts)
+        idx = cls(artifacts, get_backend(backend), **backend_opts)
+        if update_opts:
+            from repro.update import as_policy
+
+            # validated eagerly so a bad option fails at build time
+            idx._policy = as_policy(
+                update_opts.get("merge"), update_opts.get("capacity")
+            )
+        return idx
 
     def with_backend(self, backend: str, **backend_opts) -> "SpatialIndex":
         """A new index answering from the SAME build artifacts on another
-        backend (build once, serve anywhere; lowerings are shared)."""
-        return SpatialIndex(self.artifacts, get_backend(backend), **backend_opts)
+        backend (build once, serve anywhere; lowerings are shared).  Live
+        mutation state is shared too: the twin answers over the same
+        base ∪ delta − tombstones, and mutations through either index are
+        visible to both."""
+        new = SpatialIndex(self.artifacts, get_backend(backend), **backend_opts)
+        new._policy = self._policy
+        new._updates_cell = self._updates_cell
+        if self._updates is not None:
+            new._backend_base_epoch = self._updates.base_epoch
+        return new
 
-    def extend(self, new_mbrs) -> "SpatialIndex":
-        """Batch insertion: a new index over ``mbrs + new_mbrs``.
+    def extend(self, new_mbrs, *, flush: str = "auto") -> "SpatialIndex":
+        """Batch insertion: a new index whose live set adds ``new_mbrs``.
 
-        The paper inserts one object at a time; the array pipeline instead
-        re-runs the (bulk) build over the concatenated object set — for
-        ``build="device"`` that is one device launch, which at bulk sizes
-        is far cheaper than per-object host insertion (DESIGN.md §7).
-        Build options (``levels`` re-derived if it was auto) and backend
-        options are inherited; the original index is untouched.
+        Routed through the live-update subsystem (DESIGN.md §8): the
+        batch lands in the NEW index's delta buffer and merges by policy
+        — no unconditional rebuild — while this index stays untouched.
+        ``flush="always"`` restores the old eager behavior (compact
+        immediately; on a never-mutated index that is exactly the legacy
+        full re-build over the concatenated arrays, one device launch for
+        ``build="device"``).  Batches larger than the buffer capacity
+        merge directly either way.
         """
+        if flush not in ("auto", "always"):
+            raise ValueError(
+                f"unknown flush {flush!r}; expected 'auto' or 'always'"
+            )
         new_mbrs = np.asarray(new_mbrs, np.float64).reshape(-1, 4)
-        mbrs = np.concatenate([self.artifacts.mbrs, new_mbrs], axis=0)
-        artifacts = BuildArtifacts(
-            self.structure, mbrs, **self.artifacts.build_opts
-        )
-        return SpatialIndex(artifacts, self.spec, **self._backend_opts)
+        if flush == "always" and self._updates is None:
+            # Legacy path, bit-for-bit: a pristine re-build over the
+            # concatenated object set, no live-update state attached.
+            mbrs = np.concatenate([self.artifacts.mbrs, new_mbrs], axis=0)
+            artifacts = BuildArtifacts(
+                self.structure, mbrs, **self.artifacts.build_opts
+            )
+            clone = SpatialIndex(artifacts, self.spec, **self._backend_opts)
+            clone._policy = self._policy
+            return clone
+        clone = self._snapshot()
+        clone.insert(new_mbrs)
+        if flush == "always":
+            clone.flush()
+        return clone
+
+    def _snapshot(self) -> "SpatialIndex":
+        """A new index over the same (current) base with an independent
+        copy of any live-update state."""
+        clone = SpatialIndex(self.artifacts, self.spec, **self._backend_opts)
+        clone._policy = self._policy
+        if self._updates is not None:
+            clone._updates = self._updates.snapshot()
+            clone._backend_base_epoch = clone._updates.base_epoch
+        return clone
 
     # -- introspection -------------------------------------------------
+    @property
+    def artifacts(self) -> BuildArtifacts:
+        """The CURRENT frozen base build (replaced at every merge)."""
+        if self._updates is not None:
+            return self._updates.base
+        return self._artifacts
+
     @property
     def structure(self) -> str:
         return self.artifacts.structure
@@ -306,19 +408,163 @@ class SpatialIndex:
 
     @property
     def n_objects(self) -> int:
+        """Number of LIVE objects (base survivors + buffered inserts)."""
+        if self._updates is not None:
+            return self._updates.n_live
+        return self.artifacts.n_objects
+
+    @property
+    def id_space(self) -> int:
+        """Width of ``RegionResult.hits``: the dense global-id space
+        ``[0, id_space)``.  Equals ``n_objects`` until live updates
+        begin; append-only afterwards (deleted ids never recycle, §8)."""
+        if self._updates is not None:
+            return self._updates.id_capacity
         return self.artifacts.n_objects
 
     @property
     def schedule(self) -> LevelSchedule:
         return self.artifacts.schedule
 
+    # -- live updates (DESIGN.md §8) -----------------------------------
+    def _ensure_log(self):
+        if self._updates is None:
+            from repro.update import MergePolicy, UpdateLog
+
+            structure = self._artifacts.structure
+            build_opts = dict(self._artifacts.build_opts)
+            self._updates = UpdateLog(
+                self._artifacts,
+                self._policy if self._policy is not None else MergePolicy(),
+                rebuild=lambda mbrs: BuildArtifacts(
+                    structure, mbrs, **build_opts
+                ),
+            )
+            self._backend_base_epoch = self._updates.base_epoch
+        return self._updates
+
+    def _live(self):
+        from repro.update.engine import LiveEngine
+
+        if self._live_engine is None or self._live_engine.log is not self._updates:
+            self._live_engine = LiveEngine(
+                self._updates, self.spec.name, self._backend_opts
+            )
+        return self._live_engine
+
+    def _current_backend(self):
+        """The pristine backend adapter over the CURRENT base build,
+        re-lowered lazily after a merge (possibly initiated through a
+        ``with_backend`` twin sharing the same update log)."""
+        if (
+            self._updates is not None
+            and self._backend_base_epoch != self._updates.base_epoch
+        ):
+            self._backend = self.spec.factory(
+                self.artifacts, **self._backend_opts
+            )
+            self._backend_base_epoch = self._updates.base_epoch
+        return self._backend
+
+    def insert(self, new_mbrs) -> np.ndarray:
+        """Insert objects ONLINE; returns their global ids.
+
+        The batch lands in the device-resident delta buffer (O(1), no
+        rebuild) and is immediately visible to every query path; the
+        merge policy — or a full buffer — folds it into a fresh base
+        build later.  Batches larger than the buffer capacity merge
+        directly (one bulk rebuild over the live set, the §7 path).
+        """
+        new_mbrs = np.asarray(new_mbrs, np.float64).reshape(-1, 4)
+        n = new_mbrs.shape[0]
+        if n == 0:  # no-op: leave pristine state and epochs untouched
+            return np.zeros((0,), np.int64)
+        log = self._ensure_log()
+        if n > log.capacity or not log.can_buffer(n):
+            # Oversized batch, or overflow (free slots / id headroom):
+            # fold the batch straight into one merge — also the only
+            # correct move when every prior object was deleted.
+            gids = log.merge_insert(new_mbrs)
+            self.stats.flushes += 1
+        else:
+            gids = log.buffer_insert(new_mbrs)
+            if log.policy.should_flush(
+                fill=log.fill, tombstone_ratio=log.tombstone_ratio
+            ):
+                log.flush()
+                self.stats.flushes += 1
+        self.stats.inserts += n
+        return gids
+
+    def delete(self, ids) -> None:
+        """Delete live objects by global id (tombstone semantics, §8).
+
+        Base objects stay physically in the frozen build, masked out of
+        every hit set from this call on; buffered inserts free their
+        delta slot.  Unknown or already-dead ids raise ``KeyError``.
+        """
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        if ids.size == 0:  # no-op: leave pristine state and epochs untouched
+            return
+        log = self._ensure_log()
+        gids = log.delete(ids)
+        self.stats.deletes += int(gids.shape[0])
+        if (
+            log.n_live > 0
+            and log.policy.should_flush(
+                fill=log.fill, tombstone_ratio=log.tombstone_ratio
+            )
+        ):
+            log.flush()
+            self.stats.flushes += 1
+
+    def flush(self) -> bool:
+        """Manually merge buffer + tombstones into a fresh base build.
+
+        Hit sets are bit-identical before and after (global ids are
+        preserved); returns True if a merge actually ran.
+        """
+        if self._updates is None:
+            return False
+        if self._updates.flush():
+            self.stats.flushes += 1
+            return True
+        return False
+
+    def live_metrics(self):
+        """Paper §5.2 structure-quality metrics (overlap, overcoverage,
+        …) of the CURRENT live object set, evaluated on the mqr
+        insertion-rule oracle tree — how the zero-overlap property is
+        monitored under mutation (DESIGN.md §8)."""
+        from repro.core import metrics as _metrics
+        from repro.update.oracle import live_tree
+
+        return _metrics.compute_metrics(live_tree(self))
+
     # -- queries -------------------------------------------------------
+    def _region_raw(self, queries: np.ndarray):
+        """Route a region batch: pristine backend, or the live engine
+        once update state exists.  Returns
+        ``(hits, visits, launches, base_levels-or-None)``."""
+        if self._updates is None:
+            hits, visits, launches = self._backend.region(queries)
+            return hits, visits, launches, None
+        hits, visits, launches = self._live().region(
+            queries,
+            base_region=lambda qs: self._current_backend().region(qs),
+        )
+        return hits, visits, launches, self._updates.base.schedule.levels
+
     def region(self, queries) -> RegionResult:
         """Batched region search over (Q, 4) query rectangles."""
         queries = np.asarray(queries, np.float32).reshape(-1, 4)
-        hits, visits, launches = self._backend.region(queries)
+        hits, visits, launches, base_levels = self._region_raw(queries)
         self.stats.record(queries.shape[0], visits.sum(), launches)
-        return RegionResult(hits=hits, visits_per_level=visits)
+        if base_levels is not None:
+            self.stats.delta_accesses += int(visits[:, base_levels:].sum())
+        return RegionResult(
+            hits=hits, visits_per_level=visits, base_levels=base_levels
+        )
 
     def point(self, points) -> RegionResult:
         """Point queries (Q, 2) as degenerate rectangles.
@@ -346,8 +592,15 @@ class SpatialIndex:
         points = np.asarray(points, np.float64).reshape(-1, 2)
         if not 1 <= k <= self.n_objects:
             raise ValueError(f"k={k} outside [1, {self.n_objects}]")
+        live = self._updates
         if self.spec.name == "host":
-            if self.artifacts.pointer_tree is not None:
+            if live is not None:
+                # Under mutation the base pointer tree is stale; the host
+                # oracle answers exactly from the live id-space table.
+                ids, dists, visits = _knn.knn_brute_masked(
+                    live.mbr_table, live.alive, points, k
+                )
+            elif self.artifacts.pointer_tree is not None:
                 ids, dists, visits = _knn.knn_pointer(
                     self.artifacts.pointer_tree, points, k
                 )
@@ -357,12 +610,19 @@ class SpatialIndex:
             self.stats.record(points.shape[0], visits.sum(), 0)
         else:
             def region_fn(qs):
-                hits, visits, launches = self._backend.region(qs)
+                hits, visits, launches, base_levels = self._region_raw(qs)
                 self.stats.record(0, visits.sum(), launches)
+                if base_levels is not None:
+                    self.stats.delta_accesses += int(
+                        visits[:, base_levels:].sum()
+                    )
                 return hits, visits
 
+            # Live indexes rank candidates over the id-space MBR table
+            # (hits already exclude tombstones, so stale rows never rank).
+            obj_mbrs = live.mbr_table if live is not None else self.artifacts.mbrs
             ids, dists, visits, rounds = _knn.knn_expanding(
-                region_fn, self.artifacts.mbrs, points, k
+                region_fn, obj_mbrs, points, k
             )
             self.stats.knn_queries += points.shape[0]
             self.stats.knn_rounds += rounds

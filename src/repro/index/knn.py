@@ -103,10 +103,26 @@ def knn_pointer(tree, points: np.ndarray, k: int):
 
 def knn_brute(obj_mbrs: np.ndarray, points: np.ndarray, k: int):
     """Exact k-NN by scanning every object MBR (pyramid host path)."""
-    d = _mindist_np(np.asarray(points, np.float64), np.asarray(obj_mbrs, np.float64))
+    obj_mbrs = np.asarray(obj_mbrs)
+    return knn_brute_masked(
+        obj_mbrs, np.ones((obj_mbrs.shape[0],), bool), points, k
+    )
+
+
+def knn_brute_masked(mbr_table: np.ndarray, alive: np.ndarray,
+                     points: np.ndarray, k: int):
+    """Exact k-NN over the LIVE rows of an id-space MBR table — the host
+    path once live updates begin (DESIGN.md §8).  Dead and unallocated
+    rows are masked to +inf distance, so ids and tie-breaks (lowest
+    global id first, stable argsort) resolve exactly as
+    :func:`knn_brute` would on the compacted live set."""
+    d = _mindist_np(
+        np.asarray(points, np.float64), np.asarray(mbr_table, np.float64)
+    )
+    d = np.where(alive[None, :], d, np.inf)
     order = np.argsort(d, axis=1, kind="stable")[:, :k]
     dists = np.take_along_axis(d, order, axis=1).astype(np.float32)
-    visits = np.full((points.shape[0],), obj_mbrs.shape[0], np.int64)
+    visits = np.full((points.shape[0],), int(alive.sum()), np.int64)
     return order.astype(np.int32), dists, visits
 
 

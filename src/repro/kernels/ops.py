@@ -17,10 +17,16 @@ from .build import device_schedule as _device_schedule
 from .flash_attention import flash_attention as _flash
 from .mbr_scan import mbr_scan as _mbr_scan
 from .mqr_sparse_attention import mqr_sparse_attention as _sparse
-from .pyramid_scan import _fused_search, _fused_search_compact
+from .pyramid_scan import (
+    _fused_search,
+    _fused_search_compact,
+    _fused_search_compact_live,
+    _fused_search_live,
+)
 from .pyramid_scan import per_level_region_search as _per_level
 from .pyramid_scan import pyramid_scan as _pyramid_scan
 from .pyramid_scan import pyramid_scan_compact as _pyramid_scan_compact
+from .quantize import quantize_rows as quantize_rows  # noqa: F401 (re-export)
 from .quantize import quantize_schedule as _quantize_schedule
 from .rmsnorm import rmsnorm as _rmsnorm
 
@@ -69,6 +75,62 @@ def fused_search(
         block_w=block_w,
         root_unconditional=root_unconditional,
         test_object_mbr=test_object_mbr,
+        interpret=interpret,
+    )
+
+
+def fused_search_live(
+    queries, mbr_cm, parent, obj_mbr, obj_level, obj_slot, obj_id, alive,
+    *,
+    n_objects: int,
+    base_levels: int,
+    block_w: int = 128,
+    root_unconditional: bool = True,
+    test_object_mbr: bool = True,
+    interpret: bool | None = None,
+):
+    """Live-update variant of :func:`fused_search` (DESIGN.md §8): the
+    level grid carries ``base_levels`` hierarchical levels plus appended
+    FLAT delta-buffer levels (swept unconditionally in the same launch),
+    object ids are global, and ``alive`` masks tombstoned ids out of the
+    hit set.  Returns ``(hits (Q, n_objects), visits (Q, L+D))``."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _fused_search_live(
+        queries, mbr_cm, parent, obj_mbr, obj_level, obj_slot, obj_id, alive,
+        n_objects=n_objects,
+        base_levels=base_levels,
+        block_w=block_w,
+        root_unconditional=root_unconditional,
+        test_object_mbr=test_object_mbr,
+        interpret=interpret,
+    )
+
+
+def fused_search_compact_live(
+    queries, mbr_q, parent_q, confirm_mbr, obj_level, obj_slot, obj_id,
+    origin, inv_cell, alive,
+    *,
+    n_objects: int,
+    cells: int,
+    base_levels: int,
+    block_w: int = 128,
+    root_unconditional: bool = True,
+    interpret: bool | None = None,
+):
+    """Live-update variant of :func:`fused_search_compact`: uint16 base
+    tiles + quantized flat delta levels in one integer sweep, exact
+    confirming pass, tombstones masked via ``alive`` (DESIGN.md §8)."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _fused_search_compact_live(
+        queries, mbr_q, parent_q, confirm_mbr, obj_level, obj_slot, obj_id,
+        origin, inv_cell, alive,
+        n_objects=n_objects,
+        cells=cells,
+        base_levels=base_levels,
+        block_w=block_w,
+        root_unconditional=root_unconditional,
         interpret=interpret,
     )
 

@@ -78,6 +78,7 @@ def _sweep_kernel(
     width: int,
     root_unconditional: bool,
     onehot_gather: bool,
+    uncond_from: int,
 ):
     l = pl.program_id(0)
     t = pl.program_id(1)
@@ -107,7 +108,13 @@ def _sweep_kernel(
         act0 = jnp.broadcast_to(root[None, :], ov.shape)
     else:
         act0 = ov
-    act = jnp.where(l == 0, act0, parent_active & ov)
+    # Levels at or past ``uncond_from`` are FLAT appendices (the live-update
+    # delta buffer, DESIGN.md §8): every slot is tested against the query
+    # directly, with no parent gating — a linear scan fused into the same
+    # launch as the hierarchical sweep.
+    act = jnp.where(
+        l == 0, act0, jnp.where(l >= uncond_from, ov, parent_active & ov)
+    )
 
     cur_ref[:, pl.ds(t * block_w, block_w)] = act.astype(jnp.float32)
     act_ref[0] = act
@@ -116,7 +123,8 @@ def _sweep_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "block_w", "root_unconditional", "interpret", "onehot_gather"
+        "block_w", "root_unconditional", "interpret", "onehot_gather",
+        "uncond_from",
     ),
 )
 def level_sweep(
@@ -128,8 +136,15 @@ def level_sweep(
     root_unconditional: bool = True,
     interpret: bool = False,
     onehot_gather: bool | None = None,
+    uncond_from: int | None = None,
 ) -> jnp.ndarray:
-    """Run the fused sweep; returns the (L, Q, W) per-level active mask."""
+    """Run the fused sweep; returns the (L, Q, W) per-level active mask.
+
+    ``uncond_from`` marks the first FLAT level: levels ``>= uncond_from``
+    skip the parent gate and test every slot against the query directly —
+    how the live-update delta buffer rides the same launch (DESIGN.md §8).
+    ``None`` (the default) keeps the whole sweep hierarchical.
+    """
     levels, _, w = mbr_cm.shape
     q = queries.shape[0]
     pad = (-w) % block_w
@@ -160,6 +175,7 @@ def level_sweep(
         width=wp,
         root_unconditional=root_unconditional,
         onehot_gather=onehot_gather,
+        uncond_from=levels if uncond_from is None else uncond_from,
     )
     act = pl.pallas_call(
         kernel,
@@ -319,6 +335,98 @@ def pyramid_scan_compact(
         root_unconditional=qsched.base.root_unconditional,
         interpret=interpret,
     )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_objects", "base_levels", "block_w", "root_unconditional",
+        "test_object_mbr", "interpret",
+    ),
+)
+def _fused_search_live(
+    queries, mbr_cm, parent, obj_mbr, obj_level, obj_slot, obj_id, alive,
+    *,
+    n_objects: int,
+    base_levels: int,
+    block_w: int,
+    root_unconditional: bool,
+    test_object_mbr: bool,
+    interpret: bool,
+):
+    """Fused sweep over base levels + appended flat delta levels.
+
+    The live-update subsystem (DESIGN.md §8) appends the delta buffer as
+    ``uncond_from = base_levels`` flat levels: one launch still sweeps
+    everything, and the epilogue scatters base entries and delta slots
+    into the same global-id hit mask, then masks tombstoned ids with
+    ``alive``.  ``visits`` keeps the per-level layout — columns past
+    ``base_levels`` are delta-side accesses.
+    """
+    act = level_sweep(
+        queries, mbr_cm, parent,
+        block_w=block_w,
+        root_unconditional=root_unconditional,
+        interpret=interpret,
+        uncond_from=base_levels,
+    )  # (L_base + D, Q, W)
+    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))  # (Q, L+D)
+    entry_act = act[obj_level, :, obj_slot]  # (E + C, Q)
+    hit = jnp.transpose(entry_act)           # (Q, E + C)
+    if test_object_mbr:
+        hit = hit & _overlaps(obj_mbr[None, :, :], queries[:, None, :])
+    q = queries.shape[0]
+    hits = jnp.zeros((q, max(n_objects, 1)), jnp.bool_)
+    hits = hits.at[:, obj_id].max(hit)
+    # Tombstone mask: deleted ids drop out here, in the same jit program.
+    hits = hits & alive[None, :]
+    return hits, visits
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_objects", "cells", "base_levels", "block_w",
+        "root_unconditional", "interpret",
+    ),
+)
+def _fused_search_compact_live(
+    queries, mbr_q, parent_q, confirm_mbr, obj_level, obj_slot, obj_id,
+    origin, inv_cell, alive,
+    *,
+    n_objects: int,
+    cells: int,
+    base_levels: int,
+    block_w: int,
+    root_unconditional: bool,
+    interpret: bool,
+):
+    """Compact (uint16-tile) twin of :func:`_fused_search_live`.
+
+    Delta rows are quantized outward onto the base grid (clipped — see
+    ``kernels.quantize.quantize_rows``), swept as flat levels in the same
+    integer launch, and confirmed exactly against their float32 MBRs, so
+    the tombstone-masked hit sets stay bit-identical to the float32 live
+    path (DESIGN.md §8).
+    """
+    t = (queries - origin[None, :]) * inv_cell[None, :]
+    qq = jnp.concatenate([jnp.floor(t[:, :2]), jnp.ceil(t[:, 2:])], axis=1)
+    qq = jnp.clip(qq, 0.0, float(cells)).astype(jnp.int32)
+    act = level_sweep(
+        qq, mbr_q, parent_q,
+        block_w=block_w,
+        root_unconditional=root_unconditional,
+        interpret=interpret,
+        uncond_from=base_levels,
+    )
+    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))
+    cand = jnp.transpose(act[obj_level, :, obj_slot])
+    hit = cand & _overlaps(confirm_mbr[None, :, :], queries[:, None, :])
+    q = queries.shape[0]
+    hits = jnp.zeros((q, max(n_objects, 1)), jnp.bool_)
+    hits = hits.at[:, obj_id].max(hit)
+    hits = hits & alive[None, :]
+    return hits, visits
 
 
 def per_level_region_search(

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.flat import CELLS, LevelSchedule, QuantizedSchedule
+from repro.core.flat import CELLS, Q_NEVER_MBR, LevelSchedule, QuantizedSchedule
 
 
 def grid_params(schedule: LevelSchedule):
@@ -60,6 +60,35 @@ def quantize_cm_jnp(mbr_cm, origin, inv_cell):
     # lo=+inf sentinel (padded slot) -> integer never-overlap sentinel
     cell = jnp.where(is_lo & (mbr_cm == jnp.inf), float(CELLS + 1), cell)
     return cell.astype(jnp.uint16)
+
+
+def quantize_rows(mbrs: np.ndarray, origin: np.ndarray,
+                  inv_cell: np.ndarray) -> np.ndarray:
+    """Conservative uint16 quantization of row-major (N, 4) MBRs onto an
+    EXISTING schedule grid — the delta-buffer lowering (DESIGN.md §8).
+
+    Unlike node boxes, delta rows may extend past the grid domain (inserts
+    land anywhere).  Clipping lo-after-floor and hi-after-ceil into
+    ``[0, CELLS]`` preserves the conservative-superset property because
+    scan-time queries are clipped into the same range and clip is
+    monotone: real-interval intersection still implies clipped-integer
+    intersection on every axis; the exact confirming pass removes the
+    extra boundary candidates.  Same float32 arithmetic as
+    :func:`quantize_cm_jnp`, so delta tiles behave exactly like base
+    tiles.  Rows with ``lo == +inf`` (empty slots) map to ``Q_NEVER_MBR``.
+    """
+    m = np.asarray(mbrs, np.float32)
+    origin = np.asarray(origin, np.float32)
+    inv_cell = np.asarray(inv_cell, np.float32)
+    with np.errstate(invalid="ignore", over="ignore"):
+        t = (m - origin[None, :]) * inv_cell[None, :]
+        cell = np.concatenate(
+            [np.floor(t[:, :2]), np.ceil(t[:, 2:])], axis=1
+        )
+    cell = np.clip(cell, 0.0, float(CELLS))
+    out = cell.astype(np.uint16)
+    out[np.isposinf(m[:, 0])] = Q_NEVER_MBR
+    return out
 
 
 def _quantize_kernel(mbr_ref, org_ref, inv_ref, out_ref, *, block_w: int):

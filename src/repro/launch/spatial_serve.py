@@ -63,6 +63,12 @@ class SpatialServer:
         visit counts are the compact sweep's own (DESIGN.md §7).
       quantized: optionally a pre-built ``QuantizedSchedule`` for
         ``precision="compact"`` (quantized here when omitted).
+      live: optionally the live-update array bundle
+        (``repro.update.AugmentedArrays``, DESIGN.md §8): the server then
+        dispatches the LIVE fused sweep — base levels + delta-buffer flat
+        levels + tombstone mask — and supports :meth:`rebind` to swap in
+        a new mutation epoch's arrays; the LRU is epoch-tagged so entries
+        cached under an older epoch are never served after a mutation.
     """
 
     def __init__(
@@ -75,6 +81,7 @@ class SpatialServer:
         interpret: bool | None = None,
         precision: str = "float32",
         quantized=None,
+        live=None,
     ):
         if interpret is None:
             interpret = ops.interpret_default()
@@ -85,10 +92,30 @@ class SpatialServer:
         self.query_block = int(query_block)
         self.cache_size = int(cache_size)
         self.stats = ServeStats()
-        self._cache: "OrderedDict[bytes, Tuple[np.ndarray, np.ndarray]]" = (
+        self.epoch = 0
+        self._cache: "OrderedDict[bytes, Tuple[int, Tuple[np.ndarray, np.ndarray]]]" = (
             OrderedDict()
         )
-        if precision == "compact":
+        self._n_out = schedule.n_objects
+        self._levels_out = schedule.levels
+        if live is not None:
+            if live.precision != precision:
+                raise ValueError(
+                    f"live bundle is {live.precision!r}, server asked for "
+                    f"{precision!r}"
+                )
+            self._n_out = live.n_objects
+            self._levels_out = live.levels
+            self._arrays = tuple(jnp.asarray(a) for a in live.arrays)
+            fn = (
+                ops.fused_search_compact_live
+                if precision == "compact"
+                else ops.fused_search_live
+            )
+            inner = functools.partial(
+                fn, block_w=block_w, interpret=interpret, **live.statics
+            )
+        elif precision == "compact":
             qs = quantized
             if qs is None:
                 qs = ops.quantize_schedule(schedule, interpret=interpret)
@@ -136,6 +163,30 @@ class SpatialServer:
             )
 
     # ------------------------------------------------------------------
+    def rebind(self, arrays, *, epoch: int) -> None:
+        """Swap the device-resident schedule arrays for a new mutation
+        epoch (live-update servers only; DESIGN.md §8).
+
+        The replacement must be shape-identical — delta contents and the
+        alive mask change per mutation, the compiled program does not; a
+        merge changes shapes and therefore needs a fresh server.  The
+        epoch tag advances so LRU entries cached under older epochs stop
+        matching (and are evicted on touch) instead of being served
+        stale.
+        """
+        arrays = tuple(jnp.asarray(a) for a in arrays)
+        if len(arrays) != len(self._arrays) or any(
+            a.shape != b.shape or a.dtype != b.dtype
+            for a, b in zip(arrays, self._arrays)
+        ):
+            raise ValueError(
+                "rebind requires shape/dtype-identical arrays; a merge "
+                "(base rebuild) needs a new SpatialServer"
+            )
+        self._arrays = arrays
+        self.epoch = int(epoch)
+
+    # ------------------------------------------------------------------
     def search(self, queries) -> Tuple[np.ndarray, np.ndarray]:
         """Answer (Q, 4) query rectangles.
 
@@ -147,8 +198,8 @@ class SpatialServer:
         nq = queries.shape[0]
         if nq == 0:
             return (
-                np.zeros((0, max(self.schedule.n_objects, 1)), bool),
-                np.zeros((0, self.schedule.levels), np.int32),
+                np.zeros((0, max(self._n_out, 1)), bool),
+                np.zeros((0, self._levels_out), np.int32),
             )
         self.stats.queries_served += nq
 
@@ -159,9 +210,17 @@ class SpatialServer:
             if k in fresh:  # duplicate within this batch: computed once
                 self.stats.dedup_hits += 1
             elif k in self._cache:
-                fresh[k] = self._cache[k]
-                self._cache.move_to_end(k)
-                self.stats.cache_hits += 1
+                tag, value = self._cache[k]
+                if tag == self.epoch:
+                    fresh[k] = value
+                    self._cache.move_to_end(k)
+                    self.stats.cache_hits += 1
+                else:
+                    # cached under an older mutation epoch: stale — drop
+                    # and recompute (epoch-tagged invalidation, §8)
+                    del self._cache[k]
+                    fresh[k] = None
+                    miss_rows.append(queries[i])
             else:
                 fresh[k] = None  # placeholder, filled after dispatch
                 miss_rows.append(queries[i])
@@ -209,7 +268,7 @@ class SpatialServer:
     def _put(self, key: bytes, value) -> None:
         if self.cache_size <= 0:  # caching disabled
             return
-        self._cache[key] = value
+        self._cache[key] = (self.epoch, value)
         self._cache.move_to_end(key)
         while len(self._cache) > self.cache_size:
             self._cache.popitem(last=False)

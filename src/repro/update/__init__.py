@@ -1,0 +1,18 @@
+"""Live-update subsystem: delta buffer, tombstone deletes, merge policy.
+
+Layered over the frozen build artifacts so ``SpatialIndex.insert`` /
+``.delete`` / ``.flush`` absorb online mutations without a rebuild per
+operation, while every backend's query results stay bit-identical to the
+host mqr insertion-rule oracle (DESIGN.md §8).
+"""
+
+from .buffer import AugmentedArrays, UpdateLog
+from .policy import DEFAULT_CAPACITY, MergePolicy, as_policy
+
+__all__ = [
+    "AugmentedArrays",
+    "UpdateLog",
+    "MergePolicy",
+    "as_policy",
+    "DEFAULT_CAPACITY",
+]

@@ -1,0 +1,401 @@
+"""Live-update state over a frozen base build: delta buffer + tombstones.
+
+The paper's insertion strategy is per-object and pointer-chasing; the
+device pipeline's unit of work is a whole build.  :class:`UpdateLog`
+bridges the two the way LSM-ish spatial systems do (DESIGN.md §8):
+
+* **delta buffer** — a fixed-capacity block of MBR rows + validity mask.
+  Inserts land in free slots at O(1); the fused sweep scans the buffer as
+  appended FLAT levels of the same ``pallas_call`` that walks the base
+  ``LevelSchedule`` (``uncond_from`` in :mod:`repro.kernels.pyramid_scan`).
+* **tombstones** — deletes mark an id dead in the ``alive`` bitmap; base
+  slots keep streaming through the sweep and are masked in the epilogue,
+  delta slots are freed in place.
+* **merge** — :meth:`flush` compacts the live set (base survivors + valid
+  delta rows, ascending global id = insertion order) into a fresh base
+  build via the same build path the index was created with, resetting the
+  buffer and tombstones.  :class:`repro.update.policy.MergePolicy` decides
+  when this happens automatically.
+
+Object ids are GLOBAL and append-only: the base build's objects keep ids
+``0..n-1``, every insert gets the next id, deletes never recycle ids, and
+a flush preserves them — so hit masks are comparable across mutations and
+bit-identical pre/post merge.  The id space is padded to ``id_capacity``
+(grown only at flush) so jit shapes stay fixed between merges.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.flat import NEVER_MBR, _overlaps
+
+from .policy import MergePolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class AugmentedArrays:
+    """Array bundle for the live fused sweep: base levels + delta levels.
+
+    ``arrays`` are the positional arguments of
+    :func:`repro.kernels.ops.fused_search_live` (``precision="float32"``)
+    or :func:`repro.kernels.ops.fused_search_compact_live` (``"compact"``)
+    after ``queries``; ``statics`` are their static keyword arguments.
+    One bundle is built per (mutation epoch × precision) and shared by
+    every engine over the same log — the pallas path and the serve path
+    stream identical bytes.
+    """
+
+    precision: str
+    arrays: Tuple
+    statics: dict
+    levels: int        # total grid levels, base + delta
+    base_levels: int
+    n_objects: int     # id-space width of the hit mask
+
+
+class UpdateLog:
+    """Shared mutable live-update state (one per logical index).
+
+    ``rebuild`` is the frozen-base build recipe — called with the live
+    (n, 4) float64 MBRs at every merge, it must return a fresh
+    ``BuildArtifacts``-shaped object (``.schedule`` / ``.quantized`` /
+    ``.mbrs`` / ``.n_objects``).  Keeping it a callable keeps this module
+    free of façade imports.
+    """
+
+    def __init__(self, artifacts, policy: MergePolicy,
+                 rebuild: Callable[[np.ndarray], object]):
+        self.policy = policy
+        self.capacity = int(policy.capacity)
+        self._rebuild = rebuild
+        self.base = artifacts
+        n = int(artifacts.n_objects)
+        self.base_gids = np.arange(n, dtype=np.int64)
+        self.next_gid = n
+        self.id_capacity = n + self.capacity
+        self.alive = np.zeros((self.id_capacity,), bool)
+        self.alive[:n] = True
+        self.mbr_table = np.zeros((self.id_capacity, 4), np.float64)
+        self.mbr_table[:n] = np.asarray(artifacts.mbrs, np.float64)
+        self.delta_mbrs = np.zeros((self.capacity, 4), np.float64)
+        self.delta_gids = np.zeros((self.capacity,), np.int64)
+        self.delta_valid = np.zeros((self.capacity,), bool)
+        self._slot_of: Dict[int, int] = {}
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self.dead_base = 0
+        self.epoch = 0        # bumps on every mutation
+        self.base_epoch = 0   # bumps on every merge (base arrays replaced)
+        self.flushes = 0
+        self._aug: Dict[str, Tuple[int, AugmentedArrays]] = {}
+        self._oracle: Optional[Tuple[int, object]] = None
+
+    # -- introspection --------------------------------------------------
+    @property
+    def n_base(self) -> int:
+        return int(self.base_gids.shape[0])
+
+    @property
+    def n_delta(self) -> int:
+        return self.capacity - len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return int(self.alive.sum())
+
+    @property
+    def fill(self) -> float:
+        return self.n_delta / self.capacity
+
+    @property
+    def tombstone_ratio(self) -> float:
+        return self.dead_base / max(self.n_base, 1)
+
+    @property
+    def pending(self) -> bool:
+        """Anything buffered that a merge would fold in?"""
+        return self.n_delta > 0 or self.dead_base > 0
+
+    # -- mutation -------------------------------------------------------
+    def can_buffer(self, n: int) -> bool:
+        """Room for ``n`` more inserts without merging?  Checks both free
+        slots and id-space headroom (freed slots can be reused faster
+        than ids, which never recycle)."""
+        return len(self._free) >= n and self.next_gid + n <= self.id_capacity
+
+    def buffer_insert(self, mbrs: np.ndarray) -> np.ndarray:
+        """Place ``mbrs`` (n, 4) into free delta slots; returns their new
+        global ids.  Caller must have checked :meth:`can_buffer`."""
+        mbrs = np.asarray(mbrs, np.float64).reshape(-1, 4)
+        n = mbrs.shape[0]
+        if not self.can_buffer(n):
+            raise RuntimeError(
+                f"delta buffer cannot absorb {n} inserts "
+                f"({len(self._free)} free slots, "
+                f"{self.id_capacity - self.next_gid} ids) — flush first"
+            )
+        gids = np.arange(self.next_gid, self.next_gid + n, dtype=np.int64)
+        self.next_gid += n
+        for g, m in zip(gids, mbrs):
+            s = self._free.pop()
+            self.delta_mbrs[s] = m
+            self.delta_gids[s] = g
+            self.delta_valid[s] = True
+            self._slot_of[int(g)] = s
+        self.alive[gids] = True
+        self.mbr_table[gids] = mbrs
+        self.epoch += 1
+        return gids
+
+    def delete(self, gids) -> np.ndarray:
+        """Tombstone the given live object ids.
+
+        Base ids stay physically in the frozen build (masked in the scan
+        epilogue until the next merge); delta ids free their slot in
+        place.  A dead, unknown, or duplicated id raises ``KeyError``
+        before anything is mutated.
+        """
+        gids = np.asarray(gids, np.int64).reshape(-1)
+        if gids.size == 0:  # no mutation, no epoch bump
+            return gids
+        uniq, counts = np.unique(gids, return_counts=True)
+        if (counts > 1).any():
+            raise KeyError(
+                f"duplicate id(s) in delete batch: {uniq[counts > 1].tolist()}"
+            )
+        bad = uniq[(uniq < 0) | (uniq >= self.next_gid)]
+        if bad.size == 0:
+            bad = uniq[~self.alive[uniq]]
+        if bad.size:
+            raise KeyError(f"object id(s) not live: {bad.tolist()}")
+        for g in gids:
+            g = int(g)
+            self.alive[g] = False
+            s = self._slot_of.pop(g, None)
+            if s is None:
+                self.dead_base += 1
+            else:
+                self.delta_valid[s] = False
+                self.delta_mbrs[s] = 0.0
+                self.delta_gids[s] = 0
+                self._free.append(s)
+        self.epoch += 1
+        return gids
+
+    def flush(self, force: bool = False) -> bool:
+        """Compact buffer + tombstones into a fresh base build.
+
+        No-op (returns False) when nothing is pending unless ``force``.
+        """
+        if not self.pending and not force:
+            return False
+        self._merge(extra_mbrs=None)
+        return True
+
+    def merge_insert(self, mbrs: np.ndarray) -> np.ndarray:
+        """Oversized-batch path: fold ``mbrs`` straight into the merge,
+        bypassing the buffer entirely; returns their new global ids."""
+        mbrs = np.asarray(mbrs, np.float64).reshape(-1, 4)
+        return self._merge(extra_mbrs=mbrs)
+
+    def _merge(self, extra_mbrs: Optional[np.ndarray]) -> np.ndarray:
+        if extra_mbrs is not None and extra_mbrs.shape[0]:
+            b = extra_mbrs.shape[0]
+            extra_gids = np.arange(self.next_gid, self.next_gid + b,
+                                   dtype=np.int64)
+            self.next_gid += b
+        else:
+            extra_gids = np.zeros((0,), np.int64)
+        new_id_capacity = max(self.id_capacity, self.next_gid + self.capacity)
+        if new_id_capacity > self.id_capacity:
+            alive = np.zeros((new_id_capacity,), bool)
+            alive[: self.id_capacity] = self.alive
+            table = np.zeros((new_id_capacity, 4), np.float64)
+            table[: self.id_capacity] = self.mbr_table
+            self.alive, self.mbr_table = alive, table
+            self.id_capacity = new_id_capacity
+        if extra_gids.size:
+            self.alive[extra_gids] = True
+            self.mbr_table[extra_gids] = extra_mbrs
+        live = np.nonzero(self.alive)[0]
+        if live.size == 0:
+            raise ValueError(
+                "cannot merge an index with no live objects; re-insert "
+                "before flushing or keep the deletes buffered"
+            )
+        # Ascending global id == original insertion order: the canonical
+        # order the host mqr-insertion oracle also uses.
+        self.base = self._rebuild(self.mbr_table[live])
+        self.base_gids = live.astype(np.int64)
+        self.delta_mbrs[:] = 0.0
+        self.delta_gids[:] = 0
+        self.delta_valid[:] = False
+        self._slot_of.clear()
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self.dead_base = 0
+        self.base_epoch += 1
+        self.epoch += 1
+        self.flushes += 1
+        self._aug.clear()
+        self._oracle = None
+        return extra_gids
+
+    def snapshot(self) -> "UpdateLog":
+        """Independent copy sharing only the frozen base artifacts —
+        what ``SpatialIndex.extend`` mutates so the source index stays
+        untouched."""
+        new = UpdateLog.__new__(UpdateLog)
+        new.policy = self.policy
+        new.capacity = self.capacity
+        new._rebuild = self._rebuild
+        new.base = self.base
+        new.base_gids = self.base_gids.copy()
+        new.next_gid = self.next_gid
+        new.id_capacity = self.id_capacity
+        new.alive = self.alive.copy()
+        new.mbr_table = self.mbr_table.copy()
+        new.delta_mbrs = self.delta_mbrs.copy()
+        new.delta_gids = self.delta_gids.copy()
+        new.delta_valid = self.delta_valid.copy()
+        new._slot_of = dict(self._slot_of)
+        new._free = list(self._free)
+        new.dead_base = self.dead_base
+        new.epoch = self.epoch
+        new.base_epoch = self.base_epoch
+        new.flushes = self.flushes
+        new._aug = {}
+        new._oracle = None
+        return new
+
+    # -- query-side lowerings ------------------------------------------
+    def delta_dense_f32(self) -> np.ndarray:
+        """(capacity, 4) float32 delta rows; empty slots carry the
+        never-overlap sentinel, so they vanish from sweeps and counts."""
+        return np.where(
+            self.delta_valid[:, None], self.delta_mbrs, NEVER_MBR[None, :]
+        ).astype(np.float32)
+
+    def _delta_geometry(self):
+        """Tile the capacity across flat levels of the base width."""
+        w = self.base.schedule.width
+        d = max(1, math.ceil(self.capacity / w))
+        return w, d, d * w
+
+    def augmented(self, precision: str = "float32") -> AugmentedArrays:
+        """The live sweep's arrays for this epoch (cached per precision):
+        base schedule levels + the delta buffer as flat levels, object
+        table remapped to global ids, ``alive`` tombstone mask."""
+        cached = self._aug.get(precision)
+        if cached is not None and cached[0] == self.epoch:
+            return cached[1]
+        sched = self.base.schedule
+        levels, width = sched.levels, sched.width
+        w, d, s = self._delta_geometry()
+        assert w == width
+        dm = self.delta_dense_f32()                                # (C, 4)
+        dall = np.concatenate(
+            [dm, np.broadcast_to(NEVER_MBR, (s - self.capacity, 4))], axis=0
+        )                                                          # (S, 4)
+        delta_cm = np.ascontiguousarray(
+            dall.reshape(d, w, 4).transpose(0, 2, 1)
+        )                                                          # (D, 4, W)
+        slot = np.arange(self.capacity, dtype=np.int32)
+        obj_level = np.concatenate(
+            [sched.obj_level, levels + slot // w]
+        ).astype(np.int32)
+        obj_slot = np.concatenate([sched.obj_slot, slot % w]).astype(np.int32)
+        # Empty slots point at id 0 but their sentinel MBR never activates.
+        obj_id = np.concatenate(
+            [
+                self.base_gids[sched.obj_id],
+                np.where(self.delta_valid, self.delta_gids, 0),
+            ]
+        ).astype(np.int32)
+        alive = self.alive.copy()
+        statics = dict(
+            n_objects=self.id_capacity,
+            base_levels=levels,
+            root_unconditional=sched.root_unconditional,
+        )
+        # The live contract is PER-OBJECT exactness (bit-parity with the
+        # mqr insertion oracle), so every hit is confirmed against the
+        # entry's own MBR.  For tree schedules that is the existing rule;
+        # for pyramid schedules it tightens the group semantics — when
+        # the bulk fixed point leaves several objects sharing their
+        # deepest group, the group's union MBR would otherwise leak
+        # false-positive hits into the live id space.  By MBR nesting the
+        # object test subsumes the exact ancestor chain, so no true hit
+        # is ever dropped.
+        if precision == "float32":
+            mbr_cm = np.concatenate([sched.mbr_cm, delta_cm], axis=0)
+            parent = np.concatenate(
+                [sched.parent, np.zeros((d, w), sched.parent.dtype)], axis=0
+            )
+            obj_mbr = np.concatenate([sched.obj_mbr, dm], axis=0)
+            arrays = (mbr_cm, parent, obj_mbr, obj_level, obj_slot, obj_id,
+                      alive)
+            statics["test_object_mbr"] = True
+        elif precision == "compact":
+            from repro.kernels import ops
+
+            qs = self.base.quantized
+            dq = ops.quantize_rows(dall, qs.origin, qs.inv_cell)   # (S, 4)
+            delta_q = np.ascontiguousarray(
+                dq.reshape(d, w, 4).transpose(0, 2, 1)
+            )
+            mbr_q = np.concatenate([np.asarray(qs.mbr_q), delta_q], axis=0)
+            parent_q = np.concatenate(
+                [qs.parent_q, np.zeros((d, w), qs.parent_q.dtype)], axis=0
+            )
+            # confirm against the object MBR itself (not the deepest
+            # group) — per-object exactness, see above
+            confirm = np.concatenate(
+                [np.asarray(sched.obj_mbr, np.float32), dm], axis=0
+            )
+            arrays = (mbr_q, parent_q, confirm, obj_level, obj_slot, obj_id,
+                      qs.origin, qs.inv_cell, alive)
+            statics["cells"] = qs.cells
+        else:
+            raise ValueError(f"unknown precision {precision!r}")
+        aug = AugmentedArrays(
+            precision=precision,
+            arrays=arrays,
+            statics=statics,
+            levels=levels + d,
+            base_levels=levels,
+            n_objects=self.id_capacity,
+        )
+        self._aug[precision] = (self.epoch, aug)
+        return aug
+
+    def compose(self, hits_pos: np.ndarray, visits: np.ndarray,
+                queries: np.ndarray):
+        """Lift a POSITIONAL base result into the live global-id space —
+        the host/lax composition path: scatter base hits to global ids,
+        overlay the delta-buffer scan, mask tombstones, and append the
+        delta visit columns (same counts as the fused delta levels)."""
+        queries = np.asarray(queries, np.float32)
+        nq = queries.shape[0]
+        hits = np.zeros((nq, max(self.id_capacity, 1)), bool)
+        hits[:, self.base_gids] = hits_pos[:, : self.n_base]
+        dm = self.delta_dense_f32()
+        ov = _overlaps(dm[None, :, :], queries[:, None, :])        # (Q, C)
+        if self.delta_valid.any():
+            valid = self.delta_valid
+            hits[:, self.delta_gids[valid]] = ov[:, valid]
+        hits &= self.alive[None, :]
+        # Per-object confirming pass, mirroring the fused live epilogue:
+        # structure candidates ∧ exact object-MBR overlap (f32, the
+        # device convention) — pyramid group-union semantics never leak.
+        table = self.mbr_table.astype(np.float32)
+        hits &= _overlaps(table[None, :, :], queries[:, None, :])
+        w, d, s = self._delta_geometry()
+        ovp = np.concatenate(
+            [ov, np.zeros((nq, s - self.capacity), bool)], axis=1
+        )
+        delta_visits = ovp.reshape(nq, d, w).sum(axis=2).astype(visits.dtype)
+        return hits, np.concatenate([visits, delta_visits], axis=1)

@@ -1,0 +1,111 @@
+"""Update-aware query engines: how each façade backend sweeps base ∪ delta.
+
+One :class:`LiveEngine` per ``SpatialIndex``; all engines over the same
+:class:`repro.update.buffer.UpdateLog` answer from the same augmented
+arrays (DESIGN.md §8), so hit sets and per-level visit counts agree
+bit-for-bit across backends:
+
+* ``host`` / ``lax`` — the pristine backend sweeps the frozen base
+  (positional ids), then :meth:`UpdateLog.compose` lifts the result into
+  global-id space: delta overlap scan + tombstone mask + appended delta
+  visit columns, in numpy.
+* ``pallas`` — the whole thing is ONE launch:
+  :func:`repro.kernels.ops.fused_search_live` sweeps base levels and the
+  delta buffer's flat levels in the same ``pallas_call`` and masks
+  tombstones in the jit epilogue (compact precision uses the quantized
+  twin with its exact confirming pass).
+* ``serve`` — a :class:`repro.launch.spatial_serve.SpatialServer` bound
+  to the augmented arrays; every mutation epoch rebinds the device
+  arrays and advances the server's epoch tag so LRU entries cached under
+  older epochs are invalidated, never served stale.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from .buffer import UpdateLog
+
+
+class LiveEngine:
+    """Region queries over base ∪ delta − tombstones for one backend."""
+
+    def __init__(self, log: UpdateLog, backend: str, backend_opts: dict):
+        self.log = log
+        self.backend = backend
+        self.opts = dict(backend_opts)
+        self._serve: Optional[Tuple[Tuple[int, str], object]] = None
+
+    def region(self, queries: np.ndarray, base_region=None):
+        """Returns ``(hits (Q, id_capacity), visits (Q, L+D), launches)``.
+
+        ``base_region`` is the pristine backend's positional region
+        callable — required for the composed ``host``/``lax`` paths,
+        ignored by the fused device paths.
+        """
+        if self.backend in ("host", "lax"):
+            hits_pos, visits, launches = base_region(queries)
+            hits, visits = self.log.compose(
+                np.asarray(hits_pos), np.asarray(visits), queries
+            )
+            return hits, visits, launches
+        if self.backend == "pallas":
+            return self._pallas(queries)
+        if self.backend == "serve":
+            return self._serve_region(queries)
+        raise ValueError(f"no live engine for backend {self.backend!r}")
+
+    # ------------------------------------------------------------------
+    def _pallas(self, queries):
+        precision = self.opts.get("precision", "float32")
+        aug = self.log.augmented(precision)
+        kwargs = dict(
+            block_w=self.opts.get("block_w", 128),
+            interpret=self.opts.get("interpret"),
+            **aug.statics,
+        )
+        if precision == "compact":
+            hits, visits = ops.fused_search_compact_live(
+                jnp.asarray(queries, jnp.float32), *aug.arrays, **kwargs
+            )
+        else:
+            hits, visits = ops.fused_search_live(
+                jnp.asarray(queries, jnp.float32), *aug.arrays, **kwargs
+            )
+        return np.asarray(hits), np.asarray(visits), 1
+
+    def _serve_region(self, queries):
+        from repro.launch.spatial_serve import SpatialServer
+
+        log = self.log
+        precision = self.opts.get("precision", "float32")
+        key = (log.base_epoch, precision)
+        if self._serve is None or self._serve[0] != key:
+            # Fresh server per merge: a flush changes array shapes
+            # (id capacity, level count), so the vmapped program differs.
+            aug = log.augmented(precision)
+            server = SpatialServer(
+                log.base.schedule,
+                query_block=self.opts.get("query_block", 16),
+                cache_size=self.opts.get("cache_size", 4096),
+                block_w=self.opts.get("block_w", 128),
+                interpret=self.opts.get("interpret"),
+                precision=precision,
+                live=aug,
+            )
+            server.rebind(aug.arrays, epoch=log.epoch)
+            self._serve = (key, server)
+        server = self._serve[1]
+        if server.epoch != log.epoch:
+            # Same shapes, new delta contents: swap device arrays and
+            # advance the epoch tag (stale LRU entries stop matching).
+            server.rebind(log.augmented(precision).arrays, epoch=log.epoch)
+        before = server.stats.kernel_launches
+        hits, visits = server.search(queries)
+        return hits, visits, server.stats.kernel_launches - before

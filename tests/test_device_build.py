@@ -107,16 +107,19 @@ def test_facade_device_build_parity_and_strictness():
         SpatialIndex.build(data, structure="pyramid", build="gpu")
 
 
-def test_extend_reruns_the_build():
+def test_extend_flush_always_is_the_legacy_rebuild():
+    """flush="always" on a never-mutated index reproduces the old eager
+    re-build bit-for-bit: fresh artifacts, no live-update state."""
     base = datasets.uniform_squares(200, seed=5)
     more = datasets.uniform_squares(80, seed=77)
     qs = datasets.region_queries(np.concatenate([base, more]), 6, seed=6)
     idx = SpatialIndex.build(
         base, structure="pyramid", backend="pallas", build="device"
     )
-    ext = idx.extend(more)
+    ext = idx.extend(more, flush="always")
     assert ext.n_objects == 280
     assert ext.backend == "pallas" and ext.structure == "pyramid"
+    assert ext._updates is None  # pristine: no update log attached
     fresh = SpatialIndex.build(
         np.concatenate([base, more]), structure="pyramid",
         backend="pallas", build="device",
@@ -128,9 +131,37 @@ def test_extend_reruns_the_build():
     assert idx.n_objects == 200
     # extend works on pointer structures too (host re-build)
     mq = SpatialIndex.build(base, structure="mqr", backend="pallas")
-    mq2 = mq.extend(more)
+    mq2 = mq.extend(more, flush="always")
     assert mq2.n_objects == 280
     ref = SpatialIndex.build(
         np.concatenate([base, more]), structure="mqr", backend="host"
     ).region(qs)
     assert np.array_equal(mq2.region(qs).hits, ref.hits)
+    with pytest.raises(ValueError, match="unknown flush"):
+        idx.extend(more, flush="eventually")
+
+
+def test_extend_default_routes_through_the_delta_buffer():
+    """Default extend buffers the batch (no rebuild) yet answers the same
+    hit-id sets as a fresh build over the concatenated objects."""
+    base = datasets.uniform_squares(200, seed=5)
+    more = datasets.uniform_squares(80, seed=77)
+    qs = datasets.region_queries(np.concatenate([base, more]), 6, seed=6)
+    idx = SpatialIndex.build(
+        base, structure="pyramid", backend="pallas", build="device"
+    )
+    ext = idx.extend(more)
+    assert ext.n_objects == 280
+    assert idx.n_objects == 200 and idx._updates is None  # source untouched
+    assert ext._updates is not None and ext._updates.n_delta == 80
+    assert ext._updates.flushes == 0  # buffered, not rebuilt
+    fresh = SpatialIndex.build(
+        np.concatenate([base, more]), structure="pyramid",
+        backend="pallas", build="device",
+    )
+    a, b = ext.region(qs), fresh.region(qs)
+    for i in range(qs.shape[0]):
+        assert np.array_equal(a.ids(i), b.ids(i))
+    # per-query delta-side accesses are reported separately
+    assert a.base_levels == idx.schedule.levels
+    assert int(a.delta_visits.sum()) == int(ext.stats.delta_accesses)

@@ -1,4 +1,5 @@
 """Scaled-down versions of the paper's Section 5 comparisons (trends)."""
+import numpy as np
 import pytest
 
 from repro.core import datasets, metrics, mqrtree, rtree
@@ -66,6 +67,40 @@ def test_table11_style_exponential_objects_exception():
     found_r = sum(len(rt.region_search(q)[0]) for q in qs)
     assert found_m == found_r          # same results either way
     assert vr < vm * 1.5               # R-tree competitive-or-better here
+
+
+def test_zero_overlap_preserved_under_live_updates():
+    """Section 4 property: ZERO overlap for point data — and it must
+    survive a mixed insert/delete workload through the live-update path
+    (DESIGN.md §8), both mid-buffer and after the merge compacts the
+    buffer into a fresh base build."""
+    from repro.index import SpatialIndex
+
+    rng = np.random.default_rng(21)
+    data = np.float64(np.float32(datasets.uniform_points(500, seed=21)))
+    idx = SpatialIndex.build(
+        data, structure="mqr", backend="pallas",
+        merge=dict(capacity=128, max_tombstone_ratio=0.9),
+    )
+    assert idx.live_metrics().overlap == 0.0  # pristine baseline
+    for r in range(4):
+        idx.insert(np.float64(np.float32(
+            datasets.uniform_points(100, seed=100 + r)
+        )))
+        live = np.nonzero(idx._updates.alive)[0]
+        idx.delete(rng.choice(live, size=60, replace=False))
+        # mid-buffer: the insertion-rule tree over the live set stays
+        # overlap-free (the paper's Table 2 claim, under mutation)
+        m = idx.live_metrics()
+        assert m.overlap == 0.0, f"round {r}: overlap {m.overlap}"
+    assert idx.stats.inserts == 400 and idx.stats.deletes == 240
+    idx.flush()
+    m = idx.live_metrics()
+    assert m.overlap == 0.0
+    assert m.overcoverage >= 0.0  # reported through the same path
+    # contrast: an R-tree over the same live objects does overlap
+    live_mbrs = idx._updates.mbr_table[idx._updates.alive]
+    assert metrics.compute_metrics(rtree.build(live_mbrs)).overlap > 0.0
 
 
 def test_roadlike_near_zero_overlap():
