@@ -7,6 +7,7 @@ CI bench-smoke job can exercise the whole harness in seconds.
 from __future__ import annotations
 
 import os
+import pathlib
 import time
 
 import jax
@@ -289,6 +290,75 @@ def bench_live_update():
     return rows
 
 
+def bench_durability():
+    """Durability subsystem (DESIGN.md §9): what fault tolerance costs.
+
+    Rows: snapshot save/load throughput (MB/s over the npz payload), the
+    WAL tax per mutation with and without fsync, and recovery wall-time
+    (snapshot load + WAL tail replay) as the tail grows.
+    """
+    import shutil
+    import tempfile
+
+    from repro.checkpoint import DurableIndex, load_index, save_index
+    from repro.index import SpatialIndex
+
+    n, n_mut, tail = (300, 20, (5, 20)) if TINY else (8000, 200, (50, 400))
+    data = datasets.uniform_squares(n, seed=7)
+    idx = SpatialIndex.build(data, backend="pallas", capacity=max(n_mut, 64))
+    idx.insert(datasets.uniform_squares(n_mut // 2, seed=8))
+    root = pathlib.Path(tempfile.mkdtemp(prefix="repro-bench-durable-"))
+    rows = []
+    try:
+        t_save = _timeit(lambda: save_index(idx, root / "snap"),
+                         iters=3, warm=False)
+        nbytes = (root / "snap" / "arrays.npz").stat().st_size
+        rows.append((t_save, {"impl": "snapshot-save", "n": idx.n_objects,
+                              "MB/s": round(nbytes / t_save / 2**20, 1)}))
+        t_load = _timeit(lambda: load_index(root / "snap", backend="pallas"),
+                         iters=3, warm=False)
+        rows.append((t_load, {"impl": "snapshot-load", "n": idx.n_objects,
+                              "MB/s": round(nbytes / t_load / 2**20, 1)}))
+
+        for sync in (False, True):
+            d = DurableIndex.create(
+                data, root / f"wal-{sync}", backend="pallas", sync=sync,
+                capacity=max(n_mut * 4, 64),
+            )
+            batches = [datasets.uniform_squares(1, seed=100 + i)
+                       for i in range(n_mut)]
+            t0 = time.time()
+            for b in batches:
+                d.insert(b)
+            t_mut = (time.time() - t0) / n_mut
+            d.close()
+            rows.append((t_mut, {
+                "impl": f"wal-insert-{'fsync' if sync else 'nosync'}",
+                "mutations": n_mut, "us_per_op": round(t_mut * 1e6, 1),
+            }))
+
+        for n_tail in tail:
+            troot = root / f"tail-{n_tail}"
+            d = DurableIndex.create(
+                data, troot, backend="pallas", sync=False,
+                capacity=max(n_tail * 2, 64),
+            )
+            for i in range(n_tail):
+                d.insert(datasets.uniform_squares(1, seed=200 + i))
+            d.close()
+            t_rec = _timeit(
+                lambda r=troot: DurableIndex.recover(
+                    r, backend="pallas", sync=False
+                ).close(),
+                iters=2, warm=False,
+            )
+            rows.append((t_rec, {"impl": "recover", "wal_ops": n_tail,
+                                 "ms": round(t_rec * 1e3, 1)}))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
 def bench_mqr_sparse_vs_dense_decode():
     """The paper's payoff on the KV cache: pruned vs full decode attention."""
     key = jax.random.PRNGKey(0)
@@ -329,5 +399,6 @@ JAX_BENCHES = {
     "kernel_compact_scan": bench_compact_scan,
     "index_api": bench_index_api,
     "live_update": bench_live_update,
+    "durability": bench_durability,
     "mqr_sparse_vs_dense_decode": bench_mqr_sparse_vs_dense_decode,
 }

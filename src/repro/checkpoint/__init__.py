@@ -1,1 +1,22 @@
-from .checkpoint import CheckpointManager  # noqa: F401
+from .checkpoint import CheckpointManager
+from .durable import DurableIndex, MutationResult, live_ids, mutation_workload
+from .spatial import (
+    FORMAT_VERSION,
+    SnapshotError,
+    load_index,
+    save_index,
+    snapshot_meta,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "DurableIndex",
+    "MutationResult",
+    "live_ids",
+    "mutation_workload",
+    "FORMAT_VERSION",
+    "SnapshotError",
+    "load_index",
+    "save_index",
+    "snapshot_meta",
+]

@@ -1,15 +1,121 @@
-"""Failure injection for fault-tolerance tests: deterministic or random
-crashes at step boundaries (the train loop calls ``maybe_fail(step)``)."""
+"""Failure injection for fault-tolerance tests.
+
+Two generations of harness live here:
+
+* :class:`FailureInjector` — the original train-loop hook: deterministic
+  or random crashes at step boundaries (``maybe_fail(step)``).
+* :class:`FaultPlan` — the reusable spatial-serving harness (DESIGN.md
+  §9).  One plan threads through the durable index, the write-ahead log,
+  the update engine's merge, and the spatial server's dispatch loop, so a
+  single object scripts *where* in the op/launch timeline a fault lands:
+
+    - ``kill_at_op`` / ``kill_site``: simulate a process kill at op ``k``,
+      at the ``pre-append`` / ``post-append`` / ``post-apply`` WAL
+      boundary or ``mid-merge`` (inside the compaction the op triggered);
+    - ``torn_write``: the kill lands mid-append, leaving a torn
+      (checksum-failing) record at the WAL tail;
+    - ``fail_launches`` / ``fail_rungs``: the next N device dispatches on
+      the named backend rungs raise, exercising the degradation ladder;
+    - ``slow_merge``: stretch every merge by a sleep, widening the
+      mid-merge kill window for racier schedules.
+
+Kills raise :class:`KillPoint`, which deliberately subclasses
+``BaseException`` so production ``except Exception`` recovery paths can
+never swallow a simulated SIGKILL — only the test harness catches it.
+"""
 
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+import time
+from typing import Optional, Tuple
 
 import numpy as np
 
 
 class InjectedFailure(RuntimeError):
-    pass
+    """A scripted component failure (device launch, node, ...)."""
+
+
+class KillPoint(BaseException):
+    """Simulated process kill: NOT an Exception, so no recovery/retry
+    path can accidentally absorb it — the process is 'dead'."""
+
+
+KILL_SITES = ("pre-append", "post-append", "post-apply", "mid-merge")
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Scripted faults threaded through the durability + serving stack.
+
+    The op counter is owned by the caller (the durable index passes the
+    op index into :meth:`op_event` / sets :attr:`current_op` before the
+    apply phase); launch failures keep their own countdown.
+    """
+
+    kill_at_op: Optional[int] = None
+    kill_site: str = "post-append"
+    torn_write: bool = False
+    fail_launches: int = 0
+    fail_rungs: Tuple[str, ...] = ("pallas",)
+    slow_merge: float = 0.0
+    current_op: int = dataclasses.field(default=-1, init=False)
+    kills: int = dataclasses.field(default=0, init=False)
+    launch_failures: int = dataclasses.field(default=0, init=False)
+
+    def __post_init__(self):
+        if self.kill_site not in KILL_SITES:
+            raise ValueError(
+                f"kill_site {self.kill_site!r} not in {KILL_SITES}"
+            )
+
+    # -- op timeline ----------------------------------------------------
+    def op_event(self, site: str, op_index: int) -> None:
+        """Called by the durable index at each WAL boundary of op
+        ``op_index``; raises :class:`KillPoint` when the plan says the
+        process dies here.  A ``torn_write`` kill is raised by the WAL
+        itself (mid-append), never at a clean boundary."""
+        self.current_op = op_index
+        if self.torn_write:
+            return
+        if self.kill_at_op == op_index and self.kill_site == site:
+            self.kills += 1
+            raise KillPoint(f"injected kill at op {op_index} ({site})")
+
+    def tear_now(self) -> bool:
+        """Should the WAL tear the record of the current op?  (The WAL
+        writes a partial record, then raises the kill itself.)"""
+        return self.torn_write and self.kill_at_op == self.current_op
+
+    def killed_mid_append(self) -> KillPoint:
+        self.kills += 1
+        return KillPoint(
+            f"injected kill mid-append at op {self.current_op} (torn write)"
+        )
+
+    def merge_event(self) -> None:
+        """Called from inside the update log's merge (compaction)."""
+        if self.slow_merge > 0:
+            time.sleep(self.slow_merge)
+        if (
+            self.kill_site == "mid-merge"
+            and self.kill_at_op is not None
+            and self.kill_at_op == self.current_op
+        ):
+            self.kills += 1
+            raise KillPoint(
+                f"injected kill mid-merge at op {self.current_op}"
+            )
+
+    # -- launch timeline ------------------------------------------------
+    def launch(self, rung: str) -> None:
+        """Called by the server before dispatching on ``rung``; raises
+        :class:`InjectedFailure` while the countdown lasts."""
+        if self.fail_launches > 0 and rung in self.fail_rungs:
+            self.fail_launches -= 1
+            self.launch_failures += 1
+            raise InjectedFailure(f"injected launch failure on rung {rung!r}")
 
 
 class FailureInjector:

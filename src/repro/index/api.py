@@ -54,8 +54,42 @@ STRUCTURES = ("mqr", "rtree", "pyramid")
 
 # Build-time options; everything else in **opts goes to the backend factory.
 _BUILD_OPTS = ("levels", "max_entries", "build")
-# Live-update options (structure-agnostic, consumed by the façade).
-_UPDATE_OPTS = ("capacity", "merge")
+# Live-update / durability options (structure-agnostic, façade-consumed).
+_UPDATE_OPTS = ("capacity", "merge", "admission", "fault_plan")
+
+# Admission policies for mutations that cannot be buffered (DESIGN.md §9).
+ADMISSION_MODES = ("merge", "shed")
+
+
+def validate_mbrs(mbrs, *, what: str = "mbrs") -> np.ndarray:
+    """Input hardening shared by build and insert (DESIGN.md §9).
+
+    Rejects NaN / ±inf coordinates and inverted rectangles (lo > hi on
+    either axis) with a clear ``ValueError`` — degenerate geometry would
+    otherwise flow silently through every comparison-based sweep and
+    poison hit sets, quantized tiles, and the WAL.  Degenerate-but-valid
+    points (lo == hi) pass.  Returns the validated (n, 4) float64 array.
+    """
+    arr = np.asarray(mbrs, np.float64)
+    if arr.size % 4 != 0:
+        raise ValueError(
+            f"{what} must be (n, 4) [xlo, ylo, xhi, yhi]; got shape "
+            f"{arr.shape}"
+        )
+    arr = arr.reshape(-1, 4)
+    if not np.isfinite(arr).all():
+        bad = int(np.nonzero(~np.isfinite(arr).all(axis=1))[0][0])
+        raise ValueError(
+            f"{what}[{bad}] has a non-finite coordinate "
+            f"({arr[bad].tolist()}); NaN/±inf MBRs are rejected"
+        )
+    inverted = (arr[:, 0] > arr[:, 2]) | (arr[:, 1] > arr[:, 3])
+    if inverted.any():
+        bad = int(np.nonzero(inverted)[0][0])
+        raise ValueError(
+            f"{what}[{bad}] is inverted (lo > hi): {arr[bad].tolist()}"
+        )
+    return arr
 
 
 # ---------------------------------------------------------------------------
@@ -143,11 +177,39 @@ class AccessStats:
     deletes: int = 0
     flushes: int = 0         # merges (manual, policy, or overflow)
     delta_accesses: int = 0  # node_accesses spent on delta-buffer levels
+    # durability / degradation ledger (DESIGN.md §9)
+    launch_failures: int = 0   # rung dispatch attempts that raised
+    retries: int = 0           # same-rung retries after a failure
+    degraded_batches: int = 0  # batches answered below the top rung
+    shed_mutations: int = 0    # objects dropped by admission="shed"
+    queued_mutations: int = 0  # objects parked by DurableIndex queueing
+    rung_dispatches: dict = dataclasses.field(default_factory=dict)
 
     def record(self, n_queries: int, accesses: int, launches: int) -> None:
         self.queries += int(n_queries)
         self.node_accesses += int(accesses)
         self.launches += int(launches)
+
+    def absorb_health(self, health: Optional[dict]) -> None:
+        """Fold one :meth:`SpatialServer.drain_health` delta into the
+        ledger (no-op for backends without a degradation ladder)."""
+        if not health:
+            return
+        self.retries += int(health.get("retries", 0))
+        self.degraded_batches += int(health.get("degraded_batches", 0))
+        self.launch_failures += sum(
+            int(v) for v in health.get("rung_failures", {}).values()
+        )
+        for rung, n in health.get("rung_dispatches", {}).items():
+            if n:
+                self.rung_dispatches[rung] = (
+                    self.rung_dispatches.get(rung, 0) + int(n)
+                )
+
+    @property
+    def degraded(self) -> bool:
+        """True once any batch was answered below the top rung."""
+        return self.degraded_batches > 0
 
     @property
     def accesses_per_query(self) -> float:
@@ -181,7 +243,7 @@ class BuildArtifacts:
     def __init__(self, structure: str, mbrs: np.ndarray, *, levels=None,
                  max_entries=None, build=None):
         self.structure = structure
-        self.mbrs = np.asarray(mbrs, np.float64).reshape(-1, 4)
+        self.mbrs = validate_mbrs(mbrs)
         self.n_objects = self.mbrs.shape[0]
         # original user options, so extend() can re-run the same build
         self.build_opts = dict(levels=levels, max_entries=max_entries,
@@ -226,6 +288,39 @@ class BuildArtifacts:
             raise ValueError(
                 f"unknown structure {structure!r}; expected one of {STRUCTURES}"
             )
+
+    @classmethod
+    def restore(cls, structure: str, mbrs: np.ndarray, build_opts: dict,
+                schedule: LevelSchedule, quantized=None) -> "BuildArtifacts":
+        """Rehydrate artifacts from a checkpoint (DESIGN.md §9).
+
+        The saved :class:`LevelSchedule` (and quantized tile form, when
+        it was materialized at save time) is installed directly — load
+        NEVER re-runs a device build, so an index restores even when the
+        accelerator path that built it is degraded.  The host pointer
+        tree (mqr/rtree only; needed by the host backend and pointer
+        k-NN) is rebuilt deterministically from the object table.
+        """
+        self = cls.__new__(cls)
+        self.structure = structure
+        self.mbrs = np.asarray(mbrs, np.float64).reshape(-1, 4)
+        self.n_objects = self.mbrs.shape[0]
+        self.build_opts = dict(levels=None, max_entries=None, build=None)
+        self.build_opts.update(build_opts or {})
+        self.pointer_tree = None
+        self.pyramid = None
+        self._flat = None
+        self._schedule = schedule
+        self._quantized = quantized
+        if structure == "mqr":
+            self.pointer_tree = mqrtree.build(self.mbrs)
+        elif structure == "rtree":
+            me = self.build_opts.get("max_entries")
+            self.pointer_tree = rtree.build(
+                self.mbrs,
+                max_entries=rtree.DEFAULT_M if me is None else me,
+            )
+        return self
 
     @property
     def flat(self) -> FlatTree:
@@ -285,6 +380,9 @@ class SpatialIndex:
         self._updates_cell = {"log": None}
         self._live_engine = None
         self._backend_base_epoch = 0   # base epoch self._backend was built at
+        # durability knobs (DESIGN.md §9)
+        self._admission = "merge"      # what to do with unbufferable batches
+        self._fault_plan = None        # repro.ft.FaultPlan, threaded everywhere
 
     @property
     def _updates(self):
@@ -319,19 +417,38 @@ class SpatialIndex:
             ``capacity`` (delta-buffer slots) and ``merge`` (a
             ``repro.update.MergePolicy`` or kwargs dict) configure how
             :meth:`insert`/:meth:`delete` buffer and when they compact.
+            Durability options (DESIGN.md §9): ``admission`` — what to do
+            with a batch the delta buffer cannot absorb: ``"merge"``
+            (default: fold it into a compaction; raises
+            ``repro.update.BufferFullError`` instead when the merge
+            policy has ``auto=False``) or ``"shed"`` (drop the batch,
+            count it in ``stats.shed_mutations``); ``fault_plan`` — a
+            ``repro.ft.FaultPlan`` threaded through the update engine
+            and serving ladder for fault-injection tests.
         """
         update_opts = {k: opts.pop(k) for k in list(opts) if k in _UPDATE_OPTS}
         build_opts = {k: v for k, v in opts.items() if k in _BUILD_OPTS}
         backend_opts = {k: v for k, v in opts.items() if k not in _BUILD_OPTS}
         artifacts = BuildArtifacts(structure, mbrs, **build_opts)
         idx = cls(artifacts, get_backend(backend), **backend_opts)
-        if update_opts:
+        if "capacity" in update_opts or "merge" in update_opts:
             from repro.update import as_policy
 
             # validated eagerly so a bad option fails at build time
             idx._policy = as_policy(
                 update_opts.get("merge"), update_opts.get("capacity")
             )
+        admission = update_opts.get("admission")
+        if admission is not None:
+            if admission not in ADMISSION_MODES:
+                raise ValueError(
+                    f"unknown admission {admission!r}; expected one of "
+                    f"{ADMISSION_MODES} (queueing lives in "
+                    f"repro.checkpoint.DurableIndex)"
+                )
+            idx._admission = admission
+        if update_opts.get("fault_plan") is not None:
+            idx.bind_fault_plan(update_opts["fault_plan"])
         return idx
 
     def with_backend(self, backend: str, **backend_opts) -> "SpatialIndex":
@@ -342,9 +459,12 @@ class SpatialIndex:
         visible to both."""
         new = SpatialIndex(self.artifacts, get_backend(backend), **backend_opts)
         new._policy = self._policy
+        new._admission = self._admission
         new._updates_cell = self._updates_cell
         if self._updates is not None:
             new._backend_base_epoch = self._updates.base_epoch
+        if self._fault_plan is not None:
+            new.bind_fault_plan(self._fault_plan)
         return new
 
     def extend(self, new_mbrs, *, flush: str = "auto") -> "SpatialIndex":
@@ -385,6 +505,7 @@ class SpatialIndex:
         copy of any live-update state."""
         clone = SpatialIndex(self.artifacts, self.spec, **self._backend_opts)
         clone._policy = self._policy
+        clone._admission = self._admission
         if self._updates is not None:
             clone._updates = self._updates.snapshot()
             clone._backend_base_epoch = clone._updates.base_epoch
@@ -426,6 +547,25 @@ class SpatialIndex:
     def schedule(self) -> LevelSchedule:
         return self.artifacts.schedule
 
+    # -- durability / fault injection (DESIGN.md §9) -------------------
+    def bind_fault_plan(self, plan) -> None:
+        """Thread a :class:`repro.ft.FaultPlan` (or ``None`` to detach)
+        through every layer that honors injection hooks: the update log
+        (mid-merge kills, slow merges) and the serving ladder (forced
+        launch failures)."""
+        self._fault_plan = plan
+        if self._updates is not None:
+            self._updates.fault_plan = plan
+        if hasattr(self._backend, "bind_fault_plan"):
+            self._backend.bind_fault_plan(plan)
+        if self._live_engine is not None:
+            self._live_engine.bind_fault_plan(plan)
+
+    def _drain_health(self, source) -> None:
+        drain = getattr(source, "drain_health", None)
+        if drain is not None:
+            self.stats.absorb_health(drain())
+
     # -- live updates (DESIGN.md §8) -----------------------------------
     def _ensure_log(self):
         if self._updates is None:
@@ -441,6 +581,8 @@ class SpatialIndex:
                 ),
             )
             self._backend_base_epoch = self._updates.base_epoch
+        if self._fault_plan is not None:
+            self._updates.fault_plan = self._fault_plan
         return self._updates
 
     def _live(self):
@@ -450,6 +592,8 @@ class SpatialIndex:
             self._live_engine = LiveEngine(
                 self._updates, self.spec.name, self._backend_opts
             )
+            if self._fault_plan is not None:
+                self._live_engine.bind_fault_plan(self._fault_plan)
         return self._live_engine
 
     def _current_backend(self):
@@ -475,15 +619,30 @@ class SpatialIndex:
         build later.  Batches larger than the buffer capacity merge
         directly (one bulk rebuild over the live set, the §7 path).
         """
-        new_mbrs = np.asarray(new_mbrs, np.float64).reshape(-1, 4)
+        new_mbrs = validate_mbrs(new_mbrs, what="insert batch")
         n = new_mbrs.shape[0]
         if n == 0:  # no-op: leave pristine state and epochs untouched
             return np.zeros((0,), np.int64)
         log = self._ensure_log()
-        if n > log.capacity or not log.can_buffer(n):
-            # Oversized batch, or overflow (free slots / id headroom):
-            # fold the batch straight into one merge — also the only
-            # correct move when every prior object was deleted.
+        if n > log.capacity:
+            # Oversized batch: never bufferable, folds straight into one
+            # merge — the documented bulk path, regardless of admission.
+            gids = log.merge_insert(new_mbrs)
+            self.stats.flushes += 1
+        elif not log.can_buffer(n):
+            # Full buffer (free slots / id headroom exhausted): admission
+            # control decides (DESIGN.md §9).
+            if self._admission == "shed":
+                self.stats.shed_mutations += n
+                return np.zeros((0,), np.int64)
+            if not log.policy.auto:
+                from repro.update import BufferFullError
+
+                raise BufferFullError(
+                    f"delta buffer cannot absorb {n} insert(s) "
+                    f"(fill {log.fill:.0%}) and the merge policy has "
+                    f"auto=False; call flush() or enable auto merging"
+                )
             gids = log.merge_insert(new_mbrs)
             self.stats.flushes += 1
         else:
@@ -541,6 +700,31 @@ class SpatialIndex:
 
         return _metrics.compute_metrics(live_tree(self))
 
+    # -- durability (DESIGN.md §9) -------------------------------------
+    def save(self, path) -> None:
+        """Write a versioned on-disk snapshot of the full index state —
+        base build (object table + level schedule + quantized tiles if
+        materialized), delta buffer, tombstones, id space, and merge
+        policy — atomically (tmp + rename).  :meth:`load` restores
+        bit-identical region/point/knn/count answers on every backend.
+        """
+        from repro.checkpoint.spatial import save_index
+
+        save_index(self, path)
+
+    @classmethod
+    def load(cls, path, *, backend: str = "pallas", **backend_opts
+             ) -> "SpatialIndex":
+        """Restore an index saved by :meth:`save` onto any backend.
+
+        The snapshot is backend-agnostic; the level schedule is installed
+        directly (no device rebuild runs at load time), so restore works
+        even when the accelerator path that built the index is down.
+        """
+        from repro.checkpoint.spatial import load_index
+
+        return load_index(path, backend=backend, **backend_opts)
+
     # -- queries -------------------------------------------------------
     def _region_raw(self, queries: np.ndarray):
         """Route a region batch: pristine backend, or the live engine
@@ -548,11 +732,14 @@ class SpatialIndex:
         ``(hits, visits, launches, base_levels-or-None)``."""
         if self._updates is None:
             hits, visits, launches = self._backend.region(queries)
+            self._drain_health(self._backend)
             return hits, visits, launches, None
-        hits, visits, launches = self._live().region(
+        live = self._live()
+        hits, visits, launches = live.region(
             queries,
             base_region=lambda qs: self._current_backend().region(qs),
         )
+        self._drain_health(live)
         return hits, visits, launches, self._updates.base.schedule.levels
 
     def region(self, queries) -> RegionResult:

@@ -248,11 +248,13 @@ class PallasBackend:
 class ServeBackend:
     def __init__(self, artifacts, *, query_block: int = 16,
                  cache_size: int = 4096, block_w: int = 128,
-                 interpret=None, precision: str = "float32"):
+                 interpret=None, precision: str = "float32",
+                 ladder=None, max_retries: int = 2, backoff: float = 0.05,
+                 fault_plan=None):
         _check_precision(precision)
         # Imported here: launch.spatial_serve itself builds on the index
         # package's kernel API, keep the layers acyclic at import time.
-        from repro.launch.spatial_serve import SpatialServer
+        from repro.launch.spatial_serve import LADDER, SpatialServer
 
         self.server = SpatialServer(
             artifacts.schedule,
@@ -262,9 +264,19 @@ class ServeBackend:
             interpret=interpret,
             precision=precision,
             quantized=(artifacts.quantized if precision == "compact" else None),
+            ladder=LADDER if ladder is None else ladder,
+            max_retries=max_retries,
+            backoff=backoff,
+            fault_plan=fault_plan,
         )
 
     def region(self, queries: np.ndarray):
         before = self.server.stats.kernel_launches
         hits, visits = self.server.search(queries)
         return hits, visits, self.server.stats.kernel_launches - before
+
+    def bind_fault_plan(self, plan) -> None:
+        self.server.bind_fault_plan(plan)
+
+    def drain_health(self) -> dict:
+        return self.server.drain_health()

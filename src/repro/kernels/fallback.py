@@ -1,0 +1,291 @@
+"""Degradation-ladder twins of the fused Pallas sweeps (DESIGN.md §9).
+
+When a Pallas lowering or launch fails at serving time, the
+:class:`repro.launch.spatial_serve.SpatialServer` retries the query batch
+on the next rung of its health ladder:
+
+* **lax rung** — the same level sweep in plain ``jnp`` ops (jit'd XLA, no
+  ``pallas_call``), signature-compatible with the fused entry points of
+  :mod:`repro.kernels.ops` so the server's vmap/pmap plumbing is reused
+  unchanged;
+* **host rung** — the same sweep in pure numpy, the last resort when the
+  device runtime itself is unavailable.
+
+Every twin reproduces the kernel's recurrence exactly — root slot
+unconditional (tree schedules), parent-gated overlap per level, flat
+unconditional delta levels from ``uncond_from``, per-object confirming
+pass, tombstone mask — so degraded answers are *bit-identical* to the
+healthy path's hit sets and per-level visit counts (tests/
+test_degradation.py); only latency degrades.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+def _overlap(a, b):
+    """Closed-boundary rectangle intersection, broadcasting; index/compare
+    ops only, so one definition serves numpy and traced jnp arrays (and
+    the integer grid of the compact path, where <=/& mean the same)."""
+    return (
+        (a[..., 0] <= b[..., 2])
+        & (b[..., 0] <= a[..., 2])
+        & (a[..., 1] <= b[..., 3])
+        & (b[..., 1] <= a[..., 3])
+    )
+
+
+def _quantize_queries(xp, queries, origin, inv_cell, cells):
+    """Outward query quantization of the compact sweep — identical to
+    ``pyramid_scan._fused_search_compact`` (floor lo, ceil hi, clip)."""
+    t = (queries - origin[None, :]) * inv_cell[None, :]
+    qq = xp.concatenate([xp.floor(t[:, :2]), xp.ceil(t[:, 2:])], axis=1)
+    return xp.clip(qq, 0.0, float(cells)).astype(xp.int32)
+
+
+# ---------------------------------------------------------------------------
+# lax rung: jnp level sweep, jit/vmap-able, no pallas_call
+# ---------------------------------------------------------------------------
+
+
+def _sweep_jnp(queries, mbr_cm, parent, *, root_unconditional, uncond_from):
+    """(L, Q, W) active mask — the jnp twin of ``pyramid_scan.level_sweep``."""
+    levels, _, w = mbr_cm.shape
+    mbr_rm = jnp.transpose(mbr_cm, (0, 2, 1))  # (L, W, 4)
+    nq = queries.shape[0]
+    uncond_from = levels if uncond_from is None else uncond_from
+    acts = []
+    prev = None
+    for l in range(levels):
+        ov = _overlap(mbr_rm[l][None, :, :], queries[:, None, :])  # (Q, W)
+        if l == 0:
+            if root_unconditional and uncond_from > 0:
+                act = jnp.zeros((nq, w), bool).at[:, 0].set(True)
+            else:
+                act = ov
+        elif l >= uncond_from:
+            act = ov  # flat delta level: no parent gate
+        else:
+            act = ov & jnp.take(prev, parent[l], axis=1)
+        acts.append(act)
+        prev = act
+    return jnp.stack(acts)  # (L, Q, W)
+
+
+def fused_search_lax(
+    queries, mbr_cm, parent, obj_mbr, obj_level, obj_slot, obj_id,
+    *, n_objects, block_w=128, root_unconditional=True,
+    test_object_mbr=True, interpret=None,
+):
+    del block_w, interpret  # kernel-only tuning knobs
+    act = _sweep_jnp(
+        queries, mbr_cm, parent,
+        root_unconditional=root_unconditional, uncond_from=None,
+    )
+    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))
+    hit = jnp.transpose(act[obj_level, :, obj_slot])
+    if test_object_mbr:
+        hit = hit & _overlap(obj_mbr[None, :, :], queries[:, None, :])
+    hits = jnp.zeros((queries.shape[0], max(n_objects, 1)), jnp.bool_)
+    hits = hits.at[:, obj_id].max(hit)
+    return hits, visits
+
+
+def fused_search_live_lax(
+    queries, mbr_cm, parent, obj_mbr, obj_level, obj_slot, obj_id, alive,
+    *, n_objects, base_levels, block_w=128, root_unconditional=True,
+    test_object_mbr=True, interpret=None,
+):
+    del block_w, interpret
+    act = _sweep_jnp(
+        queries, mbr_cm, parent,
+        root_unconditional=root_unconditional, uncond_from=base_levels,
+    )
+    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))
+    hit = jnp.transpose(act[obj_level, :, obj_slot])
+    if test_object_mbr:
+        hit = hit & _overlap(obj_mbr[None, :, :], queries[:, None, :])
+    hits = jnp.zeros((queries.shape[0], max(n_objects, 1)), jnp.bool_)
+    hits = hits.at[:, obj_id].max(hit)
+    return hits & alive[None, :], visits
+
+
+def fused_search_compact_lax(
+    queries, mbr_q, parent_q, confirm_mbr, obj_level, obj_slot, obj_id,
+    origin, inv_cell,
+    *, n_objects, cells, block_w=128, root_unconditional=True,
+    interpret=None,
+):
+    del block_w, interpret
+    qq = _quantize_queries(jnp, queries, origin, inv_cell, cells)
+    act = _sweep_jnp(
+        qq, mbr_q.astype(jnp.int32), parent_q.astype(jnp.int32),
+        root_unconditional=root_unconditional, uncond_from=None,
+    )
+    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))
+    cand = jnp.transpose(act[obj_level, :, obj_slot])
+    hit = cand & _overlap(confirm_mbr[None, :, :], queries[:, None, :])
+    hits = jnp.zeros((queries.shape[0], max(n_objects, 1)), jnp.bool_)
+    hits = hits.at[:, obj_id].max(hit)
+    return hits, visits
+
+
+def fused_search_compact_live_lax(
+    queries, mbr_q, parent_q, confirm_mbr, obj_level, obj_slot, obj_id,
+    origin, inv_cell, alive,
+    *, n_objects, cells, base_levels, block_w=128, root_unconditional=True,
+    interpret=None,
+):
+    del block_w, interpret
+    qq = _quantize_queries(jnp, queries, origin, inv_cell, cells)
+    act = _sweep_jnp(
+        qq, mbr_q.astype(jnp.int32), parent_q.astype(jnp.int32),
+        root_unconditional=root_unconditional, uncond_from=base_levels,
+    )
+    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))
+    cand = jnp.transpose(act[obj_level, :, obj_slot])
+    hit = cand & _overlap(confirm_mbr[None, :, :], queries[:, None, :])
+    hits = jnp.zeros((queries.shape[0], max(n_objects, 1)), jnp.bool_)
+    hits = hits.at[:, obj_id].max(hit)
+    return hits & alive[None, :], visits
+
+
+# ---------------------------------------------------------------------------
+# host rung: the same sweep in pure numpy (no device runtime at all)
+# ---------------------------------------------------------------------------
+
+
+def _sweep_np(queries, mbr_cm, parent, *, root_unconditional, uncond_from):
+    levels, _, w = mbr_cm.shape
+    mbr_rm = mbr_cm.transpose(0, 2, 1)  # (L, W, 4)
+    nq = queries.shape[0]
+    uncond_from = levels if uncond_from is None else uncond_from
+    acts = np.zeros((levels, nq, w), bool)
+    for l in range(levels):
+        ov = _overlap(mbr_rm[l][None, :, :], queries[:, None, :])
+        if l == 0:
+            if root_unconditional and uncond_from > 0:
+                act = np.zeros((nq, w), bool)
+                act[:, 0] = True
+            else:
+                act = ov
+        elif l >= uncond_from:
+            act = ov
+        else:
+            act = ov & acts[l - 1][:, parent[l]]
+        acts[l] = act
+    return acts
+
+
+def _scatter_hits_np(queries, act, obj_level, obj_slot, obj_id, n_objects,
+                     entry_gate):
+    visits = act.sum(axis=2).T.astype(np.int32)
+    hit = act[obj_level, :, obj_slot].T  # (Q, E)
+    if entry_gate is not None:
+        hit = hit & entry_gate
+    hits = np.zeros((queries.shape[0], max(n_objects, 1)), bool)
+    np.maximum.at(hits, (slice(None), obj_id), hit)
+    return hits, visits
+
+
+def fused_search_np(
+    queries, mbr_cm, parent, obj_mbr, obj_level, obj_slot, obj_id,
+    *, n_objects, block_w=128, root_unconditional=True,
+    test_object_mbr=True, interpret=None,
+):
+    del block_w, interpret
+    queries = np.asarray(queries, np.float32)
+    act = _sweep_np(
+        queries, np.asarray(mbr_cm), np.asarray(parent),
+        root_unconditional=root_unconditional, uncond_from=None,
+    )
+    gate = (
+        _overlap(np.asarray(obj_mbr)[None, :, :], queries[:, None, :])
+        if test_object_mbr else None
+    )
+    return _scatter_hits_np(
+        queries, act, np.asarray(obj_level), np.asarray(obj_slot),
+        np.asarray(obj_id), n_objects, gate,
+    )
+
+
+def fused_search_live_np(
+    queries, mbr_cm, parent, obj_mbr, obj_level, obj_slot, obj_id, alive,
+    *, n_objects, base_levels, block_w=128, root_unconditional=True,
+    test_object_mbr=True, interpret=None,
+):
+    del block_w, interpret
+    queries = np.asarray(queries, np.float32)
+    act = _sweep_np(
+        queries, np.asarray(mbr_cm), np.asarray(parent),
+        root_unconditional=root_unconditional, uncond_from=base_levels,
+    )
+    gate = (
+        _overlap(np.asarray(obj_mbr)[None, :, :], queries[:, None, :])
+        if test_object_mbr else None
+    )
+    hits, visits = _scatter_hits_np(
+        queries, act, np.asarray(obj_level), np.asarray(obj_slot),
+        np.asarray(obj_id), n_objects, gate,
+    )
+    return hits & np.asarray(alive, bool)[None, :], visits
+
+
+def fused_search_compact_np(
+    queries, mbr_q, parent_q, confirm_mbr, obj_level, obj_slot, obj_id,
+    origin, inv_cell,
+    *, n_objects, cells, block_w=128, root_unconditional=True,
+    interpret=None,
+):
+    del block_w, interpret
+    queries = np.asarray(queries, np.float32)
+    qq = _quantize_queries(
+        np, queries, np.asarray(origin), np.asarray(inv_cell), cells
+    )
+    act = _sweep_np(
+        qq, np.asarray(mbr_q, np.int32), np.asarray(parent_q, np.int32),
+        root_unconditional=root_unconditional, uncond_from=None,
+    )
+    gate = _overlap(np.asarray(confirm_mbr)[None, :, :], queries[:, None, :])
+    return _scatter_hits_np(
+        queries, act, np.asarray(obj_level), np.asarray(obj_slot),
+        np.asarray(obj_id), n_objects, gate,
+    )
+
+
+def fused_search_compact_live_np(
+    queries, mbr_q, parent_q, confirm_mbr, obj_level, obj_slot, obj_id,
+    origin, inv_cell, alive,
+    *, n_objects, cells, base_levels, block_w=128, root_unconditional=True,
+    interpret=None,
+):
+    del block_w, interpret
+    queries = np.asarray(queries, np.float32)
+    qq = _quantize_queries(
+        np, queries, np.asarray(origin), np.asarray(inv_cell), cells
+    )
+    act = _sweep_np(
+        qq, np.asarray(mbr_q, np.int32), np.asarray(parent_q, np.int32),
+        root_unconditional=root_unconditional, uncond_from=base_levels,
+    )
+    gate = _overlap(np.asarray(confirm_mbr)[None, :, :], queries[:, None, :])
+    hits, visits = _scatter_hits_np(
+        queries, act, np.asarray(obj_level), np.asarray(obj_slot),
+        np.asarray(obj_id), n_objects, gate,
+    )
+    return hits & np.asarray(alive, bool)[None, :], visits
+
+
+# variant key -> (lax rung fn, host rung fn); the server picks by the
+# same (precision, live) pair it used to choose the fused kernel.
+FALLBACKS = {
+    ("float32", False): (fused_search_lax, fused_search_np),
+    ("float32", True): (fused_search_live_lax, fused_search_live_np),
+    ("compact", False): (fused_search_compact_lax, fused_search_compact_np),
+    ("compact", True): (
+        fused_search_compact_live_lax, fused_search_compact_live_np,
+    ),
+}

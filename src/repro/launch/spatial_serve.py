@@ -21,6 +21,7 @@ import argparse
 import dataclasses
 import functools
 import time
+import warnings
 from collections import OrderedDict
 from typing import Tuple
 
@@ -30,7 +31,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.flat import NEVER_MBR, LevelSchedule
-from repro.kernels import ops
+from repro.kernels import fallback, ops
+
+LADDER = ("pallas", "lax", "host")
 
 
 @dataclasses.dataclass
@@ -41,6 +44,14 @@ class ServeStats:
     batches_dispatched: int = 0
     kernel_launches: int = 0      # one fused launch per dispatched block
     node_accesses: int = 0        # sum of per-level visit counts ("disk accesses")
+    retries: int = 0              # failed launches retried on the same rung
+    degraded_batches: int = 0     # batches answered below the top rung
+    rung_dispatches: dict = dataclasses.field(
+        default_factory=lambda: {r: 0 for r in LADDER}
+    )
+    rung_failures: dict = dataclasses.field(
+        default_factory=lambda: {r: 0 for r in LADDER}
+    )
 
     @property
     def cache_hit_rate(self) -> float:
@@ -69,6 +80,18 @@ class SpatialServer:
         levels + tombstone mask — and supports :meth:`rebind` to swap in
         a new mutation epoch's arrays; the LRU is epoch-tagged so entries
         cached under an older epoch are never served after a mutation.
+      ladder: health ladder walked when a rung's launch fails (DESIGN.md
+        §9).  Each rung answers with the identical sweep semantics —
+        ``pallas`` is the fused kernel, ``lax`` the plain-XLA twin,
+        ``host`` the numpy twin — so degradation changes latency, never
+        answers.
+      max_retries: failed launches retried per rung (with exponential
+        backoff) before falling to the next rung.
+      backoff: base retry sleep in seconds; attempt ``k`` waits
+        ``backoff * 2**k``, capped at ``backoff_cap``.
+      fault_plan: optional :class:`repro.ft.FaultPlan`; its
+        :meth:`~repro.ft.FaultPlan.launch` hook fires before every rung
+        dispatch so tests can force launch failures deterministically.
     """
 
     def __init__(
@@ -82,16 +105,34 @@ class SpatialServer:
         precision: str = "float32",
         quantized=None,
         live=None,
+        ladder: Tuple[str, ...] = LADDER,
+        max_retries: int = 2,
+        backoff: float = 0.05,
+        backoff_cap: float = 1.0,
+        fault_plan=None,
     ):
         if interpret is None:
             interpret = ops.interpret_default()
         if precision not in ("float32", "compact"):
             raise ValueError(f"unknown precision {precision!r}")
+        ladder = tuple(ladder)
+        bad = [r for r in ladder if r not in LADDER]
+        if not ladder or bad:
+            raise ValueError(
+                f"ladder rungs must be drawn from {LADDER}, got {ladder!r}"
+            )
         self.schedule = schedule
         self.precision = precision
         self.query_block = int(query_block)
         self.cache_size = int(cache_size)
+        self.ladder = ladder
+        self.max_retries = int(max_retries)
+        self.backoff = float(backoff)
+        self.backoff_cap = float(backoff_cap)
+        self.fault_plan = fault_plan
+        self._rung_floor = 0   # sticky: index of the lowest healthy rung
         self.stats = ServeStats()
+        self._health_mark = (0, 0, {r: 0 for r in LADDER}, {r: 0 for r in LADDER})
         self.epoch = 0
         self._cache: "OrderedDict[bytes, Tuple[int, Tuple[np.ndarray, np.ndarray]]]" = (
             OrderedDict()
@@ -112,9 +153,7 @@ class SpatialServer:
                 if precision == "compact"
                 else ops.fused_search_live
             )
-            inner = functools.partial(
-                fn, block_w=block_w, interpret=interpret, **live.statics
-            )
+            kwargs = dict(block_w=block_w, interpret=interpret, **live.statics)
         elif precision == "compact":
             qs = quantized
             if qs is None:
@@ -129,8 +168,8 @@ class SpatialServer:
                 jnp.asarray(qs.origin),
                 jnp.asarray(qs.inv_cell),
             )
-            inner = functools.partial(
-                ops.fused_search_compact,
+            fn = ops.fused_search_compact
+            kwargs = dict(
                 n_objects=schedule.n_objects,
                 cells=qs.cells,
                 block_w=block_w,
@@ -146,16 +185,23 @@ class SpatialServer:
                 jnp.asarray(schedule.obj_slot),
                 jnp.asarray(schedule.obj_id),
             )
-            inner = functools.partial(
-                ops.fused_search,
+            fn = ops.fused_search
+            kwargs = dict(
                 n_objects=schedule.n_objects,
                 block_w=block_w,
                 root_unconditional=schedule.root_unconditional,
                 test_object_mbr=schedule.test_object_mbr,
                 interpret=interpret,
             )
-        batch_axes = (0,) + (None,) * len(self._arrays)
+        inner = functools.partial(fn, **kwargs)
+        # Signature-compatible degradation twins: same statics, no pallas.
+        fb_lax, fb_np = fallback.FALLBACKS[(precision, live is not None)]
+        self._inner_lax = functools.partial(fb_lax, **kwargs)
+        self._inner_np = functools.partial(fb_np, **kwargs)
+        self._batch_axes = batch_axes = (0,) + (None,) * len(self._arrays)
         self._vmapped = jax.jit(jax.vmap(inner, in_axes=batch_axes))
+        self._vmapped_lax = None   # jit'd lazily, on first lax-rung dispatch
+        self._np_arrays = None     # host copies, materialized on first use
         self._pmapped = None
         if jax.device_count() > 1:
             self._pmapped = jax.pmap(
@@ -184,7 +230,48 @@ class SpatialServer:
                 "(base rebuild) needs a new SpatialServer"
             )
         self._arrays = arrays
+        self._np_arrays = None
         self.epoch = int(epoch)
+
+    def bind_fault_plan(self, plan) -> None:
+        """Attach (or detach, with ``None``) a fault-injection plan."""
+        self.fault_plan = plan
+
+    def reset_health(self) -> None:
+        """Forget sticky degradation: the next batch starts back at the
+        top rung (call after the underlying fault is known fixed)."""
+        self._rung_floor = 0
+
+    @property
+    def current_rung(self) -> str:
+        return self.ladder[min(self._rung_floor, len(self.ladder) - 1)]
+
+    def drain_health(self) -> dict:
+        """Return health-ladder counter deltas since the previous drain
+        (retries, degraded batches, per-rung dispatches/failures) — the
+        façade folds these into ``AccessStats`` per query call."""
+        s = self.stats
+        m_ret, m_deg, m_disp, m_fail = self._health_mark
+        out = {
+            "retries": s.retries - m_ret,
+            "degraded_batches": s.degraded_batches - m_deg,
+            "rung_dispatches": {
+                r: s.rung_dispatches.get(r, 0) - m_disp.get(r, 0)
+                for r in LADDER
+            },
+            "rung_failures": {
+                r: s.rung_failures.get(r, 0) - m_fail.get(r, 0)
+                for r in LADDER
+            },
+            "rung": self.current_rung,
+        }
+        self._health_mark = (
+            s.retries,
+            s.degraded_batches,
+            dict(s.rung_dispatches),
+            dict(s.rung_failures),
+        )
+        return out
 
     # ------------------------------------------------------------------
     def search(self, queries) -> Tuple[np.ndarray, np.ndarray]:
@@ -250,20 +337,103 @@ class SpatialServer:
             )
         blocks = miss.reshape(-1, qb, 4)
         nb = blocks.shape[0]
-        n_dev = jax.device_count()
-        if self._pmapped is not None and nb % n_dev == 0:
-            sharded = blocks.reshape(n_dev, nb // n_dev, qb, 4)
-            hits, visits = self._pmapped(jnp.asarray(sharded), *self._arrays)
-            hits = np.asarray(hits).reshape(nb * qb, -1)
-            visits = np.asarray(visits).reshape(nb * qb, -1)
-        else:
-            hits, visits = self._vmapped(jnp.asarray(blocks), *self._arrays)
-            hits = np.asarray(hits).reshape(nb * qb, -1)
-            visits = np.asarray(visits).reshape(nb * qb, -1)
+        hits, visits, launches = self._run_ladder(blocks)
         self.stats.batches_dispatched += 1
-        self.stats.kernel_launches += nb
+        self.stats.kernel_launches += launches
         self.stats.node_accesses += int(visits[:n].sum())
         return hits[:n], visits[:n]
+
+    def _run_ladder(
+        self, blocks: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Dispatch one padded block batch down the health ladder.
+
+        Starts at the sticky rung floor (a rung that exhausted its retry
+        budget earlier stays skipped until :meth:`reset_health`), retries
+        each rung ``max_retries`` times with bounded exponential backoff,
+        then degrades to the next rung.  A simulated SIGKILL
+        (``repro.ft.KillPoint``) derives from ``BaseException`` so it is
+        NOT absorbed as a rung failure.
+        """
+        last_exc: Exception | None = None
+        start = min(self._rung_floor, len(self.ladder) - 1)
+        for ri in range(start, len(self.ladder)):
+            rung = self.ladder[ri]
+            for attempt in range(self.max_retries + 1):
+                try:
+                    if self.fault_plan is not None:
+                        self.fault_plan.launch(rung)
+                    out = self._dispatch_rung(rung, blocks)
+                except Exception as exc:
+                    last_exc = exc
+                    self.stats.rung_failures[rung] += 1
+                    if attempt < self.max_retries:
+                        self.stats.retries += 1
+                        if self.backoff > 0:
+                            time.sleep(
+                                min(self.backoff * 2**attempt, self.backoff_cap)
+                            )
+                    continue
+                self.stats.rung_dispatches[rung] += 1
+                if ri > 0:
+                    self.stats.degraded_batches += 1
+                return out
+            # Retry budget exhausted: degrade, and stay degraded (sticky
+            # floor) so subsequent batches skip the broken rung.
+            if ri + 1 < len(self.ladder):
+                self._rung_floor = max(self._rung_floor, ri + 1)
+                warnings.warn(
+                    f"SpatialServer: rung {rung!r} failed "
+                    f"{self.max_retries + 1}x ({last_exc!r}); degrading to "
+                    f"{self.ladder[ri + 1]!r}",
+                    RuntimeWarning,
+                    stacklevel=3,
+                )
+        raise RuntimeError(
+            f"SpatialServer: every ladder rung {self.ladder!r} failed"
+        ) from last_exc
+
+    def _dispatch_rung(
+        self, rung: str, blocks: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, int]:
+        """One attempt on one rung; returns flat (hits, visits, launches)."""
+        nb, qb, _ = blocks.shape
+        if rung == "pallas":
+            n_dev = jax.device_count()
+            if self._pmapped is not None and nb % n_dev == 0:
+                sharded = blocks.reshape(n_dev, nb // n_dev, qb, 4)
+                hits, visits = self._pmapped(
+                    jnp.asarray(sharded), *self._arrays
+                )
+            else:
+                hits, visits = self._vmapped(
+                    jnp.asarray(blocks), *self._arrays
+                )
+            return (
+                np.asarray(hits).reshape(nb * qb, -1),
+                np.asarray(visits).reshape(nb * qb, -1),
+                nb,
+            )
+        if rung == "lax":
+            if self._vmapped_lax is None:
+                self._vmapped_lax = jax.jit(
+                    jax.vmap(self._inner_lax, in_axes=self._batch_axes)
+                )
+            hits, visits = self._vmapped_lax(
+                jnp.asarray(blocks), *self._arrays
+            )
+            return (
+                np.asarray(hits).reshape(nb * qb, -1),
+                np.asarray(visits).reshape(nb * qb, -1),
+                nb,
+            )
+        # host: pure numpy, zero device launches
+        if self._np_arrays is None:
+            self._np_arrays = tuple(np.asarray(a) for a in self._arrays)
+        hits, visits = self._inner_np(
+            blocks.reshape(nb * qb, 4), *self._np_arrays
+        )
+        return np.asarray(hits), np.asarray(visits), 0
 
     def _put(self, key: bytes, value) -> None:
         if self.cache_size <= 0:  # caching disabled

@@ -6,13 +6,19 @@ operation, while every backend's query results stay bit-identical to the
 host mqr insertion-rule oracle (DESIGN.md §8).
 """
 
-from .buffer import AugmentedArrays, UpdateLog
+from .buffer import AugmentedArrays, BufferFullError, UpdateLog
 from .policy import DEFAULT_CAPACITY, MergePolicy, as_policy
+from .wal import WriteAheadLog, read_wal, recover_wal, repair_wal
 
 __all__ = [
     "AugmentedArrays",
+    "BufferFullError",
     "UpdateLog",
     "MergePolicy",
     "as_policy",
     "DEFAULT_CAPACITY",
+    "WriteAheadLog",
+    "read_wal",
+    "recover_wal",
+    "repair_wal",
 ]

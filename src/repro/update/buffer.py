@@ -37,6 +37,13 @@ from repro.core.flat import NEVER_MBR, _overlaps
 from .policy import MergePolicy
 
 
+class BufferFullError(RuntimeError):
+    """The delta buffer (or its id headroom) cannot absorb a batch and
+    the merge policy forbids compacting implicitly (``auto=False``).
+    Typed so admission control can shed/queue instead of failing the
+    request opaquely (DESIGN.md §9)."""
+
+
 @dataclasses.dataclass(frozen=True)
 class AugmentedArrays:
     """Array bundle for the live fused sweep: base levels + delta levels.
@@ -91,6 +98,9 @@ class UpdateLog:
         self.epoch = 0        # bumps on every mutation
         self.base_epoch = 0   # bumps on every merge (base arrays replaced)
         self.flushes = 0
+        # fault-injection hook (repro.ft.FaultPlan): lets the harness
+        # stretch merges / kill mid-merge (DESIGN.md §9); None in prod.
+        self.fault_plan = None
         self._aug: Dict[str, Tuple[int, AugmentedArrays]] = {}
         self._oracle: Optional[Tuple[int, object]] = None
 
@@ -133,7 +143,7 @@ class UpdateLog:
         mbrs = np.asarray(mbrs, np.float64).reshape(-1, 4)
         n = mbrs.shape[0]
         if not self.can_buffer(n):
-            raise RuntimeError(
+            raise BufferFullError(
                 f"delta buffer cannot absorb {n} inserts "
                 f"({len(self._free)} free slots, "
                 f"{self.id_capacity - self.next_gid} ids) — flush first"
@@ -229,6 +239,11 @@ class UpdateLog:
             )
         # Ascending global id == original insertion order: the canonical
         # order the host mqr-insertion oracle also uses.
+        if self.fault_plan is not None:
+            # Mid-merge fault window: the WAL record for the triggering
+            # op is durable but the compaction has not replaced the base
+            # yet — a kill here must recover by re-running the merge.
+            self.fault_plan.merge_event()
         self.base = self._rebuild(self.mbr_table[live])
         self.base_gids = live.astype(np.int64)
         self.delta_mbrs[:] = 0.0
@@ -267,6 +282,69 @@ class UpdateLog:
         new.epoch = self.epoch
         new.base_epoch = self.base_epoch
         new.flushes = self.flushes
+        new.fault_plan = self.fault_plan
+        new._aug = {}
+        new._oracle = None
+        return new
+
+    # -- durability (DESIGN.md §9) --------------------------------------
+    def state_arrays(self) -> Dict[str, np.ndarray]:
+        """The complete mutable state as named arrays, for the index
+        snapshot (:mod:`repro.checkpoint.spatial`).  ``base`` itself is
+        snapshotted by the caller (it owns the schedule arrays)."""
+        return {
+            "base_gids": self.base_gids,
+            "alive": self.alive,
+            "mbr_table": self.mbr_table,
+            "delta_mbrs": self.delta_mbrs,
+            "delta_gids": self.delta_gids,
+            "delta_valid": self.delta_valid,
+            "free": np.asarray(self._free, np.int64),
+        }
+
+    def state_scalars(self) -> Dict[str, int]:
+        return {
+            "capacity": self.capacity,
+            "next_gid": int(self.next_gid),
+            "id_capacity": int(self.id_capacity),
+            "dead_base": int(self.dead_base),
+            "epoch": int(self.epoch),
+            "base_epoch": int(self.base_epoch),
+            "flushes": int(self.flushes),
+        }
+
+    @classmethod
+    def restore(cls, artifacts, policy: MergePolicy, rebuild,
+                arrays: Dict[str, np.ndarray],
+                scalars: Dict[str, int]) -> "UpdateLog":
+        """Rebuild an :class:`UpdateLog` from snapshot state — the exact
+        inverse of :meth:`state_arrays`/:meth:`state_scalars`, restoring
+        slot layout (including free-slot order) bit-for-bit so replayed
+        mutations land exactly where they would have pre-crash."""
+        new = cls.__new__(cls)
+        new.policy = policy
+        new.capacity = int(scalars["capacity"])
+        new._rebuild = rebuild
+        new.base = artifacts
+        new.base_gids = np.asarray(arrays["base_gids"], np.int64).copy()
+        new.next_gid = int(scalars["next_gid"])
+        new.id_capacity = int(scalars["id_capacity"])
+        new.alive = np.asarray(arrays["alive"], bool).copy()
+        new.mbr_table = np.asarray(arrays["mbr_table"], np.float64).copy()
+        new.delta_mbrs = np.asarray(arrays["delta_mbrs"], np.float64).copy()
+        new.delta_gids = np.asarray(arrays["delta_gids"], np.int64).copy()
+        new.delta_valid = np.asarray(arrays["delta_valid"], bool).copy()
+        new._slot_of = {
+            int(g): int(s)
+            for s, g in enumerate(new.delta_gids)
+            if new.delta_valid[s]
+        }
+        new._free = [int(s) for s in np.asarray(arrays["free"], np.int64)]
+        new.dead_base = int(scalars["dead_base"])
+        new.epoch = int(scalars["epoch"])
+        new.base_epoch = int(scalars["base_epoch"])
+        new.flushes = int(scalars["flushes"])
+        new.fault_plan = None
         new._aug = {}
         new._oracle = None
         return new

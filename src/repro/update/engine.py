@@ -42,6 +42,19 @@ class LiveEngine:
         self.opts = dict(backend_opts)
         self._serve: Optional[Tuple[Tuple[int, str], object]] = None
 
+    def bind_fault_plan(self, plan) -> None:
+        """Thread a fault-injection plan into the live serve path."""
+        self.opts["fault_plan"] = plan
+        if self._serve is not None:
+            self._serve[1].bind_fault_plan(plan)
+
+    def drain_health(self) -> Optional[dict]:
+        """Health-ladder counter deltas from the live server (None when
+        this engine has no server — host/lax/pallas paths)."""
+        if self._serve is None:
+            return None
+        return self._serve[1].drain_health()
+
     def region(self, queries: np.ndarray, base_region=None):
         """Returns ``(hits (Q, id_capacity), visits (Q, L+D), launches)``.
 
@@ -89,6 +102,8 @@ class LiveEngine:
         if self._serve is None or self._serve[0] != key:
             # Fresh server per merge: a flush changes array shapes
             # (id capacity, level count), so the vmapped program differs.
+            from repro.launch.spatial_serve import LADDER
+
             aug = log.augmented(precision)
             server = SpatialServer(
                 log.base.schedule,
@@ -98,6 +113,10 @@ class LiveEngine:
                 interpret=self.opts.get("interpret"),
                 precision=precision,
                 live=aug,
+                ladder=self.opts.get("ladder") or LADDER,
+                max_retries=self.opts.get("max_retries", 2),
+                backoff=self.opts.get("backoff", 0.05),
+                fault_plan=self.opts.get("fault_plan"),
             )
             server.rebind(aug.arrays, epoch=log.epoch)
             self._serve = (key, server)

@@ -1,0 +1,184 @@
+"""Graceful kernel degradation (DESIGN.md §9): the pallas → lax → host
+health ladder changes latency, never answers.
+
+Every rung runs the same sweep semantics — the fused Pallas kernel, its
+plain-XLA twin, and its numpy twin — so with ALL Pallas launches forced
+to fail the server still returns bit-identical hit sets via the lax (or
+host) rung while reporting the degradation in its stats.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import datasets, flat, mqrtree
+from repro.ft import FaultPlan
+from repro.index import SpatialIndex
+from repro.launch.spatial_serve import LADDER, SpatialServer
+from repro.update import oracle
+
+
+def _server(plan=None, **kw):
+    data = datasets.uniform_squares(240, seed=21)
+    sched = flat.level_schedule(flat.flatten(mqrtree.build(data)))
+    kw.setdefault("query_block", 4)
+    kw.setdefault("cache_size", 0)
+    kw.setdefault("backoff", 0.0)
+    server = SpatialServer(sched, fault_plan=plan, **kw)
+    queries = datasets.region_queries(data, 10, seed=22)
+    return server, queries
+
+
+class TestLadder:
+    def test_healthy_server_stays_on_pallas(self):
+        server, queries = _server()
+        server.search(queries)
+        h = server.drain_health()
+        assert h["rung"] == "pallas"
+        assert h["rung_dispatches"]["pallas"] > 0
+        assert h["degraded_batches"] == 0 and h["retries"] == 0
+
+    def test_retry_recovers_without_degrading(self):
+        # one failure, then the retry on the SAME rung succeeds
+        plan = FaultPlan(fail_launches=1, fail_rungs=("pallas",))
+        server, queries = _server(plan)
+        ref_hits, _ = _server()[0].search(queries)
+        hits, _ = server.search(queries)
+        assert np.array_equal(hits, ref_hits)
+        h = server.drain_health()
+        assert h["retries"] == 1 and h["degraded_batches"] == 0
+        assert server.current_rung == "pallas"
+
+    def test_all_pallas_failures_fall_to_lax_with_parity(self):
+        healthy, queries = _server()
+        ref_hits, ref_visits = healthy.search(queries)
+        plan = FaultPlan(fail_launches=10**9, fail_rungs=("pallas",))
+        server, _ = _server(plan)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            hits, visits = server.search(queries)
+        assert np.array_equal(hits, ref_hits)
+        assert np.array_equal(visits, ref_visits)
+        h = server.drain_health()
+        assert h["rung"] == "lax"
+        assert h["degraded_batches"] > 0
+        assert h["rung_failures"]["pallas"] > 0
+        assert h["rung_dispatches"]["lax"] > 0
+        assert h["rung_dispatches"]["pallas"] == 0
+
+    def test_pallas_and_lax_failures_fall_to_host(self):
+        healthy, queries = _server()
+        ref_hits, ref_visits = healthy.search(queries)
+        plan = FaultPlan(fail_launches=10**9, fail_rungs=("pallas", "lax"))
+        server, _ = _server(plan)
+        before = server.stats.kernel_launches
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            hits, visits = server.search(queries)
+        assert np.array_equal(hits, ref_hits)
+        assert np.array_equal(visits, ref_visits)
+        assert server.current_rung == "host"
+        assert server.stats.kernel_launches == before  # host launches nothing
+        h = server.drain_health()
+        assert h["rung_dispatches"]["host"] > 0
+
+    def test_floor_is_sticky_then_resettable(self):
+        plan = FaultPlan(fail_launches=3, fail_rungs=("pallas",))
+        server, queries = _server(plan)  # max_retries=2 → 3 tries burn all
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            server.search(queries)
+        assert server.current_rung == "lax"
+        server.search(queries[:2])  # sticky: pallas is not re-probed
+        assert plan.launch_failures == 3
+        assert server.current_rung == "lax"
+        server.reset_health()
+        assert server.current_rung == "pallas"
+        server.search(queries[:2])  # healthy again (countdown exhausted)
+        assert server.drain_health()["rung"] == "pallas"
+
+    def test_degradation_warns(self):
+        plan = FaultPlan(fail_launches=10**9, fail_rungs=("pallas",))
+        server, queries = _server(plan)
+        with pytest.warns(RuntimeWarning, match="degrading"):
+            server.search(queries)
+
+    def test_exhausted_ladder_raises(self):
+        plan = FaultPlan(fail_launches=10**9, fail_rungs=("pallas",))
+        server, queries = _server(plan, ladder=("pallas",))
+        with pytest.raises(RuntimeError, match="every ladder rung"):
+            server.search(queries)
+
+    def test_compact_precision_ladder_parity(self):
+        healthy, queries = _server(precision="compact")
+        ref_hits, _ = healthy.search(queries)
+        plan = FaultPlan(fail_launches=10**9, fail_rungs=("pallas", "lax"))
+        server, _ = _server(plan, precision="compact")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            hits, _ = server.search(queries)
+        assert np.array_equal(hits, ref_hits)
+        assert server.current_rung == "host"
+
+    def test_bad_ladder_rejected(self):
+        with pytest.raises(ValueError, match="ladder"):
+            _server(ladder=("pallas", "gpu"))
+        with pytest.raises(ValueError, match="ladder"):
+            _server(ladder=())
+
+
+class TestFacadeDegradation:
+    """The acceptance path: a serve-backend SpatialIndex keeps answering
+    correctly under total Pallas failure, and AccessStats says so."""
+
+    def _pair(self, plan, *, mutate=False):
+        data = datasets.uniform_squares(200, seed=31)
+        queries = datasets.region_queries(data, 8, seed=32)
+        kw = dict(query_block=4, cache_size=0, backoff=0.0)
+        idx = SpatialIndex.build(
+            data, backend="serve", fault_plan=plan, capacity=16, **kw
+        )
+        if mutate:
+            idx.insert(datasets.uniform_squares(5, seed=33))
+            idx.delete([3, 17, 201])
+        return idx, queries
+
+    def test_pristine_serve_degrades_and_reports(self):
+        plan = FaultPlan(fail_launches=10**9, fail_rungs=("pallas",))
+        idx, queries = self._pair(plan)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            res = idx.region(queries)
+        ref = oracle.hits_mask(idx, queries, idx.id_space)
+        assert np.array_equal(res.hits, ref)
+        stats = idx.stats
+        assert stats.degraded and stats.degraded_batches > 0
+        assert stats.launch_failures > 0
+        assert stats.rung_dispatches.get("lax", 0) > 0
+        assert stats.rung_dispatches.get("pallas", 0) == 0
+
+    def test_live_serve_degrades_and_reports(self):
+        # the live fused sweep (delta buffer + tombstones) has lax/host
+        # twins too: mutate first, then fail every pallas launch
+        plan = FaultPlan(fail_launches=10**9, fail_rungs=("pallas", "lax"))
+        idx, queries = self._pair(plan, mutate=True)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            res = idx.region(queries)
+        twin = idx.with_backend("host")
+        assert np.array_equal(res.hits, twin.region(queries).hits)
+        ref = oracle.hits_mask(idx, queries, idx.id_space)
+        assert np.array_equal(res.hits, ref)
+        assert idx.stats.degraded
+        assert idx.stats.rung_dispatches.get("host", 0) > 0
+
+    def test_healthy_serve_reports_no_degradation(self):
+        idx, queries = self._pair(None)
+        idx.region(queries)
+        assert not idx.stats.degraded
+        assert idx.stats.rung_dispatches.get("pallas", 0) > 0
+
+
+def test_ladder_constant_order():
+    assert LADDER == ("pallas", "lax", "host")

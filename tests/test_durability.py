@@ -1,0 +1,603 @@
+"""Durability: snapshots, the mutation WAL, and crash recovery (§9).
+
+The acceptance contract: a process kill at ANY op index of a mixed
+insert/delete/flush workload — before the WAL append, after it, after
+the apply, mid-merge, or tearing the record itself — recovers via
+"latest snapshot + WAL tail replay" to a live set bit-identical to a
+fault-free run of the surviving op prefix, and to the host mqr oracle,
+on every backend.  Exhaustive kill indices with REPRO_FT_EXHAUSTIVE=1;
+sampled (seedable via REPRO_FT_SEED) otherwise.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    DurableIndex,
+    SnapshotError,
+    live_ids,
+    mutation_workload,
+)
+from repro.core import datasets
+from repro.ft import FaultPlan, KillPoint
+from repro.index import SpatialIndex
+from repro.update import (
+    BufferFullError,
+    WriteAheadLog,
+    oracle,
+    read_wal,
+    recover_wal,
+)
+
+BACKENDS = ("host", "lax", "pallas", "serve")
+
+EXHAUSTIVE = os.environ.get("REPRO_FT_EXHAUSTIVE") == "1"
+FT_SEED = int(os.environ.get("REPRO_FT_SEED", "0"))
+N_OPS = int(os.environ.get("REPRO_FT_OPS", "1000" if EXHAUSTIVE else "80"))
+
+
+# ---------------------------------------------------------------------------
+# WAL unit behavior
+# ---------------------------------------------------------------------------
+
+
+class TestWal:
+    def test_roundtrip(self, tmp_path):
+        p = tmp_path / "w.log"
+        with WriteAheadLog(p) as w:
+            w.append("insert", np.arange(8.0).reshape(2, 4))
+            w.append("delete", [3, 1])
+            w.append("flush")
+        records, torn, _ = read_wal(p)
+        assert not torn
+        assert [op for op, _ in records] == ["insert", "delete", "flush"]
+        assert np.array_equal(records[0][1], np.arange(8.0).reshape(2, 4))
+        assert np.array_equal(records[1][1], [3, 1])
+        assert records[2][1].size == 0
+
+    def test_reopen_appends(self, tmp_path):
+        p = tmp_path / "w.log"
+        with WriteAheadLog(p) as w:
+            w.append("delete", [1])
+        with WriteAheadLog(p) as w:
+            assert w.seq == 1
+            w.append("delete", [2])
+        records, torn, _ = read_wal(p)
+        assert not torn and len(records) == 2
+
+    def test_torn_tail_detected_and_repaired(self, tmp_path):
+        p = tmp_path / "w.log"
+        with WriteAheadLog(p) as w:
+            w.append("insert", np.ones((1, 4)))
+            w.append("delete", [0])
+        whole = p.read_bytes()
+        p.write_bytes(whole[:-3])  # tear the last record
+        records, torn, valid_end = read_wal(p)
+        assert torn and len(records) == 1
+        wal, records, torn = recover_wal(p)
+        wal.close()
+        assert torn and len(records) == 1
+        # after repair the tail is gone and appends extend cleanly
+        with WriteAheadLog(p) as w:
+            assert w.seq == 1
+            w.append("flush")
+        records, torn, _ = read_wal(p)
+        assert not torn and len(records) == 2
+
+    def test_corrupt_payload_stops_replay(self, tmp_path):
+        p = tmp_path / "w.log"
+        with WriteAheadLog(p) as w:
+            w.append("delete", [7])
+            off_ok = p.stat().st_size
+            w.append("delete", [8])
+        raw = bytearray(p.read_bytes())
+        raw[off_ok + 10] ^= 0xFF  # flip a byte inside record 2's payload
+        p.write_bytes(bytes(raw))
+        records, torn, valid_end = read_wal(p)
+        assert torn and len(records) == 1 and valid_end == off_ok
+
+    def test_bad_magic_raises(self, tmp_path):
+        from repro.update.wal import WalCorruption
+
+        p = tmp_path / "w.log"
+        p.write_bytes(b"NOTAWAL0" + b"x" * 32)
+        with pytest.raises(WalCorruption):
+            read_wal(p)
+
+    def test_missing_file_is_empty_log(self, tmp_path):
+        records, torn, _ = read_wal(tmp_path / "nope.log")
+        assert records == [] and not torn
+
+    def test_torn_write_injection(self, tmp_path):
+        plan = FaultPlan(kill_at_op=0, torn_write=True)
+        plan.op_event("pre-append", 0)
+        w = WriteAheadLog(tmp_path / "w.log", fault_plan=plan)
+        with pytest.raises(KillPoint):
+            w.append("insert", np.ones((1, 4)))
+        w.close()
+        records, torn, _ = read_wal(tmp_path / "w.log")
+        assert torn and records == []
+
+
+# ---------------------------------------------------------------------------
+# Snapshot save/load parity
+# ---------------------------------------------------------------------------
+
+
+class TestSnapshot:
+    def test_save_load_parity_all_backends(self, tmp_path):
+        data = datasets.uniform_squares(120, seed=0)
+        queries = datasets.region_queries(data, 16, seed=1)
+        pts = data[:6, :2] + 0.01
+        idx = SpatialIndex.build(data, backend="pallas", capacity=24)
+        idx.insert(datasets.uniform_squares(7, seed=3))
+        idx.delete([2, 5, 121])
+        ref = idx.region(queries)
+        refk = idx.knn(pts, k=4)
+        idx.save(tmp_path / "snap")
+        for be in BACKENDS:
+            r = SpatialIndex.load(tmp_path / "snap", backend=be)
+            res = r.region(queries)
+            assert np.array_equal(res.hits, ref.hits), be
+            assert np.array_equal(
+                res.visits_per_level, ref.visits_per_level
+            ), be
+            k = r.knn(pts, k=4)
+            assert np.array_equal(k.ids, refk.ids), be
+            assert r.n_objects == idx.n_objects
+            assert r.id_space == idx.id_space
+
+    def test_save_load_pristine_and_compact(self, tmp_path):
+        data = datasets.uniform_squares(90, seed=2)
+        queries = datasets.region_queries(data, 12, seed=4)
+        idx = SpatialIndex.build(data, backend="pallas", precision="compact")
+        ref = idx.region(queries)
+        idx.save(tmp_path / "s")
+        r = SpatialIndex.load(
+            tmp_path / "s", backend="pallas", precision="compact"
+        )
+        # the quantized tiles were saved: load must not re-quantize
+        assert r.artifacts._quantized is not None
+        assert np.array_equal(r.region(queries).hits, ref.hits)
+        assert np.array_equal(
+            r.region(queries).visits_per_level, ref.visits_per_level
+        )
+
+    def test_mutation_continues_deterministically_after_load(self, tmp_path):
+        data = datasets.uniform_squares(60, seed=5)
+        idx = SpatialIndex.build(data, backend="host", capacity=16)
+        idx.insert(datasets.uniform_squares(5, seed=6))
+        idx.save(tmp_path / "s")
+        r = SpatialIndex.load(tmp_path / "s", backend="host")
+        batch = datasets.uniform_squares(4, seed=7)
+        assert np.array_equal(idx.insert(batch), r.insert(batch))
+        queries = datasets.region_queries(data, 8, seed=8)
+        assert np.array_equal(
+            idx.region(queries).hits, r.region(queries).hits
+        )
+
+    def test_unknown_version_rejected(self, tmp_path):
+        import json
+
+        data = datasets.uniform_squares(20, seed=0)
+        SpatialIndex.build(data, backend="host").save(tmp_path / "s")
+        meta = json.loads((tmp_path / "s" / "meta.json").read_text())
+        meta["format_version"] = 99
+        (tmp_path / "s" / "meta.json").write_text(json.dumps(meta))
+        with pytest.raises(SnapshotError):
+            SpatialIndex.load(tmp_path / "s", backend="host")
+
+    def test_not_a_snapshot_rejected(self, tmp_path):
+        with pytest.raises(SnapshotError):
+            SpatialIndex.load(tmp_path / "empty", backend="host")
+
+
+# ---------------------------------------------------------------------------
+# Input hardening (every degenerate shape, build + insert, all backends)
+# ---------------------------------------------------------------------------
+
+
+DEGENERATE = {
+    "nan": [0.1, 0.1, np.nan, 0.3],
+    "posinf": [0.1, 0.1, np.inf, 0.3],
+    "neginf": [-np.inf, 0.1, 0.2, 0.3],
+    "inverted_x": [0.5, 0.1, 0.2, 0.3],
+    "inverted_y": [0.1, 0.8, 0.2, 0.3],
+}
+
+
+class TestInputHardening:
+    @pytest.mark.parametrize("shape", sorted(DEGENERATE))
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_build_rejects(self, shape, backend):
+        data = datasets.uniform_squares(12, seed=0)
+        bad = np.concatenate([data, [DEGENERATE[shape]]], axis=0)
+        with pytest.raises(ValueError, match="non-finite|inverted"):
+            SpatialIndex.build(bad, backend=backend)
+
+    @pytest.mark.parametrize("shape", sorted(DEGENERATE))
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_insert_rejects(self, shape, backend):
+        idx = SpatialIndex.build(
+            datasets.uniform_squares(12, seed=0), backend=backend
+        )
+        before = idx.n_objects
+        with pytest.raises(ValueError, match="non-finite|inverted"):
+            idx.insert([DEGENERATE[shape]])
+        assert idx.n_objects == before  # nothing half-applied
+
+    def test_degenerate_point_is_valid(self):
+        idx = SpatialIndex.build(
+            datasets.uniform_squares(12, seed=0), backend="host"
+        )
+        idx.insert([[0.5, 0.5, 0.5, 0.5]])  # lo == hi: a point, accepted
+        assert idx.n_objects == 13
+
+    def test_wrong_shape_rejected(self):
+        with pytest.raises(ValueError, match=r"\(n, 4\)"):
+            SpatialIndex.build(np.zeros((5, 3)), backend="host")
+
+
+# ---------------------------------------------------------------------------
+# Buffer-full ergonomics and admission control
+# ---------------------------------------------------------------------------
+
+
+class TestAdmission:
+    def _full_manual_index(self, backend="host"):
+        data = datasets.uniform_squares(20, seed=0)
+        idx = SpatialIndex.build(
+            data, backend=backend, capacity=4, merge={"auto": False}
+        )
+        idx.insert(datasets.uniform_squares(4, seed=1))  # buffer now full
+        return idx
+
+    def test_manual_policy_overflow_raises_typed(self):
+        idx = self._full_manual_index()
+        with pytest.raises(BufferFullError, match="auto=False"):
+            idx.insert(datasets.uniform_squares(1, seed=2))
+        assert isinstance(BufferFullError("x"), RuntimeError)
+
+    def test_flush_clears_the_condition(self):
+        idx = self._full_manual_index()
+        assert idx.flush()
+        idx.insert(datasets.uniform_squares(1, seed=2))  # fits again
+        assert idx.n_objects == 25
+
+    def test_oversized_batch_still_merges(self):
+        # larger-than-capacity batches take the documented bulk path even
+        # under a manual policy: they can never fit a buffer
+        idx = self._full_manual_index()
+        idx.insert(datasets.uniform_squares(9, seed=3))
+        assert idx.n_objects == 33
+
+    def test_shed_admission_drops_and_counts(self):
+        data = datasets.uniform_squares(20, seed=0)
+        idx = SpatialIndex.build(
+            data, backend="host", capacity=4, merge={"auto": False},
+            admission="shed",
+        )
+        idx.insert(datasets.uniform_squares(4, seed=1))
+        gids = idx.insert(datasets.uniform_squares(2, seed=2))
+        assert gids.size == 0
+        assert idx.stats.shed_mutations == 2
+        assert idx.n_objects == 24  # shed batch is simply gone
+
+    def test_unknown_admission_rejected(self):
+        with pytest.raises(ValueError, match="admission"):
+            SpatialIndex.build(
+                datasets.uniform_squares(8, seed=0), backend="host",
+                admission="reject",
+            )
+
+    def test_queue_admission_in_durable_index(self, tmp_path):
+        d = DurableIndex.create(
+            datasets.uniform_squares(20, seed=0), tmp_path / "d",
+            backend="host", admission="queue", sync=False,
+            capacity=4, merge={"auto": False},
+        )
+        assert d.insert(datasets.uniform_squares(4, seed=1)).applied
+        res = d.insert(datasets.uniform_squares(2, seed=2))
+        assert res.status == "queued" and d.pending == 2
+        assert d.stats.queued_mutations == 2
+        # queued batches are NOT durable: recovery sees only applied ops
+        r = DurableIndex.recover(tmp_path / "d", backend="host", sync=False)
+        assert r.n_objects == 24
+        # a flush makes room and drains the queue durably
+        d.flush()
+        assert d.pending == 0 and d.n_objects == 26
+        r = DurableIndex.recover(tmp_path / "d", backend="host", sync=False)
+        assert np.array_equal(live_ids(r), live_ids(d))
+
+
+# ---------------------------------------------------------------------------
+# Crash recovery: the kill matrix vs a fault-free reference run
+# ---------------------------------------------------------------------------
+
+
+def _run_ops(d: DurableIndex, ops, *, upto=None):
+    """Drive the shared workload; deletes target the lowest live ids so
+    the sequence is a pure function of durable state."""
+    applied = 0
+    for op, arg in ops:
+        if upto is not None and applied >= upto:
+            break
+        if op == "insert":
+            d.insert(arg)
+        elif op == "delete":
+            lids = live_ids(d)
+            if lids.size == 0:
+                continue
+            d.delete(lids[: min(arg, lids.size)])
+        else:
+            d.flush()
+        applied += 1
+    return applied
+
+
+def _reference_state(tmp_path, base, ops, n_durable, tag):
+    """Fault-free host-side run of the surviving prefix."""
+    d = DurableIndex.create(
+        base, tmp_path / f"ref-{tag}", backend="host", sync=False,
+        capacity=12,
+    )
+    _run_ops(d, ops, upto=n_durable)
+    d.close()
+    return d
+
+
+class TestCrashRecovery:
+    def _kill_matrix(self):
+        if EXHAUSTIVE:
+            indices = list(range(N_OPS))
+        else:
+            rng = np.random.default_rng(FT_SEED)
+            indices = sorted(
+                set(
+                    rng.integers(0, N_OPS, size=8).tolist()
+                    + [0, N_OPS - 1]
+                )
+            )
+        sites = ("pre-append", "post-append", "post-apply", "mid-merge")
+        for k in indices:
+            for site in sites:
+                yield k, site, False
+            yield k, "post-append", True  # torn write at op k
+
+    def test_kill_anywhere_recovers_to_oracle(self, tmp_path):
+        base, ops = mutation_workload(N_OPS, seed=FT_SEED + 7, base_n=32)
+        queries = datasets.region_queries(base, 10, seed=9)
+        for k, site, torn in self._kill_matrix():
+            root = tmp_path / f"k{k}-{site}-{int(torn)}"
+            plan = FaultPlan(kill_at_op=k, kill_site=site, torn_write=torn)
+            d = DurableIndex.create(
+                base, root, backend="host", sync=False, capacity=12,
+                fault_plan=plan,
+            )
+            killed = False
+            try:
+                _run_ops(d, ops)
+            except KillPoint:
+                killed = True
+            d.close()
+            r = DurableIndex.recover(root, backend="host", sync=False)
+            if killed:
+                expect = k if (site == "pre-append" or torn) else k + 1
+                assert r.ops_total == expect, (k, site, torn)
+                assert r.recovered_torn == torn or not torn
+            ref = _reference_state(
+                tmp_path, base, ops, r.ops_total, f"{k}-{site}-{int(torn)}"
+            )
+            assert np.array_equal(live_ids(r), live_ids(ref)), (k, site, torn)
+            assert np.array_equal(
+                r.region(queries).hits, ref.region(queries).hits
+            ), (k, site, torn)
+
+    def test_recovered_state_matches_oracle_on_all_backends(self, tmp_path):
+        base, ops = mutation_workload(40, seed=FT_SEED + 1, base_n=32)
+        queries = datasets.region_queries(base, 10, seed=3)
+        plan = FaultPlan(kill_at_op=23, kill_site="post-append")
+        d = DurableIndex.create(
+            base, tmp_path / "d", backend="host", sync=False, capacity=12,
+            fault_plan=plan,
+        )
+        with pytest.raises(KillPoint):
+            _run_ops(d, ops)
+        d.close()
+        r = DurableIndex.recover(tmp_path / "d", backend="pallas")
+        ref = oracle.hits_mask(r.index, queries, r.id_space)
+        for be in BACKENDS:
+            got = r.index.with_backend(be).region(queries)
+            assert np.array_equal(got.hits, ref), be
+
+    def test_kill_mid_merge_replays_the_merge(self, tmp_path):
+        base, ops = mutation_workload(60, seed=FT_SEED + 2, base_n=24)
+        # find an op that actually merges by running fault-free first
+        probe = DurableIndex.create(
+            base, tmp_path / "probe", backend="host", sync=False, capacity=8
+        )
+        merge_ops = []
+        applied = 0
+        for op, arg in ops:
+            before = probe.index.stats.flushes
+            if op == "insert":
+                probe.insert(arg)
+            elif op == "delete":
+                lids = live_ids(probe)
+                if lids.size == 0:
+                    continue
+                probe.delete(lids[: min(arg, lids.size)])
+            else:
+                probe.flush()
+            if probe.index.stats.flushes > before:
+                merge_ops.append(applied)
+            applied += 1
+        probe.close()
+        assert merge_ops, "workload never merged; widen it"
+        k = merge_ops[len(merge_ops) // 2]
+        plan = FaultPlan(kill_at_op=k, kill_site="mid-merge", slow_merge=0.001)
+        d = DurableIndex.create(
+            base, tmp_path / "d", backend="host", sync=False, capacity=8,
+            fault_plan=plan,
+        )
+        with pytest.raises(KillPoint):
+            _run_ops(d, ops)
+        d.close()
+        assert plan.kills == 1
+        r = DurableIndex.recover(tmp_path / "d", backend="host", sync=False)
+        assert r.ops_total == k + 1  # the record was durable; merge replayed
+        ref = _reference_state(tmp_path, base, ops, k + 1, "midmerge")
+        assert np.array_equal(live_ids(r), live_ids(ref))
+
+    def test_checkpoint_rotation_and_gc(self, tmp_path):
+        base, ops = mutation_workload(30, seed=FT_SEED + 3, base_n=24)
+        d = DurableIndex.create(
+            base, tmp_path / "d", backend="host", sync=False, capacity=12
+        )
+        applied = 0
+        for op, arg in ops:
+            if op == "insert":
+                d.insert(arg)
+            elif op == "delete":
+                lids = live_ids(d)
+                if lids.size == 0:
+                    continue
+                d.delete(lids[: min(arg, lids.size)])
+            else:
+                d.flush()
+            applied += 1
+            if applied % 10 == 0:
+                d.checkpoint()
+        assert d.generation == 3
+        names = {p.name for p in (tmp_path / "d").iterdir()}
+        assert "snap_3" in names and "wal_3.log" in names
+        assert "snap_0" not in names and "wal_0.log" not in names  # GC'd
+        assert "snap_2" in names  # keep=1 retains the previous generation
+        r = DurableIndex.recover(tmp_path / "d", backend="host", sync=False)
+        assert r.generation == 3 and r.ops_total == d.ops_total
+        assert np.array_equal(live_ids(r), live_ids(d))
+
+    def test_kill_between_snapshot_and_new_wal(self, tmp_path):
+        # the rotation crash window: snap_<g+1> published, wal_<g+1>
+        # never created — recovery must read it as an empty log
+        base, _ = mutation_workload(1, seed=0, base_n=24)
+        d = DurableIndex.create(
+            base, tmp_path / "d", backend="host", sync=False, capacity=8
+        )
+        d.insert(datasets.uniform_squares(3, seed=1))
+        d.checkpoint()
+        d.close()
+        (tmp_path / "d" / "wal_1.log").unlink()  # simulate the kill
+        r = DurableIndex.recover(tmp_path / "d", backend="host", sync=False)
+        assert r.generation == 1 and r.n_objects == 27
+        assert r.recovered_ops == 0
+
+    def test_recover_empty_root_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            DurableIndex.recover(tmp_path / "nothing", backend="host")
+
+
+# ---------------------------------------------------------------------------
+# Property test: arbitrary interleavings of mutate/crash/recover
+# ---------------------------------------------------------------------------
+
+
+def _check_interleaving(tmp_path, ops, kill_at, site, torn, seed):
+    """The property: ANY interleaving of {insert, delete, flush} killed at
+    op ``kill_at`` (site/torn variants) recovers bit-identical to a
+    fault-free run of the surviving prefix AND to the host mqr oracle, on
+    all four backends."""
+    rng = np.random.default_rng(seed)
+    base = datasets.uniform_squares(16, seed=seed)
+    concrete = []
+    for op, arg in ops:
+        if op == "insert":
+            concrete.append(
+                ("insert", datasets.uniform_squares(
+                    arg, seed=int(rng.integers(0, 2**31))
+                ))
+            )
+        elif op == "delete":
+            concrete.append(("delete", arg))
+        else:
+            concrete.append(("flush", None))
+    plan = FaultPlan(kill_at_op=kill_at, kill_site=site, torn_write=torn)
+    d = DurableIndex.create(
+        base, tmp_path / "d", backend="host", sync=False, capacity=6,
+        fault_plan=plan,
+    )
+    try:
+        _run_ops(d, concrete)
+    except KillPoint:
+        pass
+    d.close()
+    r = DurableIndex.recover(tmp_path / "d", backend="host", sync=False)
+    ref = _reference_state(tmp_path, base, concrete, r.ops_total, "h")
+    assert np.array_equal(live_ids(r), live_ids(ref))
+    queries = datasets.region_queries(base, 6, seed=seed)
+    mask = oracle.hits_mask(r.index, queries, r.id_space)
+    for be in BACKENDS:
+        got = r.index.with_backend(be).region(queries)
+        assert np.array_equal(got.hits, mask), be
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pip install -r requirements-dev.txt
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    _op = st.one_of(
+        st.tuples(st.just("insert"), st.integers(1, 4)),
+        st.tuples(st.just("delete"), st.integers(1, 3)),
+        st.tuples(st.just("flush"), st.just(0)),
+    )
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        ops=st.lists(_op, min_size=1, max_size=24),
+        kill_at=st.integers(0, 23),
+        site=st.sampled_from(
+            ("pre-append", "post-append", "post-apply", "mid-merge")
+        ),
+        torn=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_any_interleaving_recovers_bit_identical(
+        tmp_path_factory, ops, kill_at, site, torn, seed
+    ):
+        _check_interleaving(
+            tmp_path_factory.mktemp("hyp"), ops, kill_at, site, torn, seed
+        )
+
+else:
+    # hypothesis is optional in this image: cover the same property with
+    # a fixed-seed random sweep so the invariant is still exercised.
+    @pytest.mark.parametrize("case", range(8))
+    def test_any_interleaving_recovers_bit_identical(tmp_path, case):
+        rng = np.random.default_rng(1000 + case)
+        n = int(rng.integers(4, 25))
+        ops = []
+        for _ in range(n):
+            r = rng.random()
+            if r < 0.55:
+                ops.append(("insert", int(rng.integers(1, 5))))
+            elif r < 0.85:
+                ops.append(("delete", int(rng.integers(1, 4))))
+            else:
+                ops.append(("flush", 0))
+        _check_interleaving(
+            tmp_path,
+            ops,
+            kill_at=int(rng.integers(0, n)),
+            site=("pre-append", "post-append", "post-apply", "mid-merge")[
+                case % 4
+            ],
+            torn=bool(case % 2),
+            seed=case,
+        )
