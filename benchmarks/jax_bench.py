@@ -391,6 +391,83 @@ def bench_mqr_sparse_vs_dense_decode():
     ]
 
 
+def bench_join():
+    """Tree-vs-tree spatial join (DESIGN.md §10) vs the nested-loop oracle.
+
+    Rows: joins/sec for the levelized pair sweep on float32 and compact
+    tiles (candidate pair counts alongside — the pruning is the point)
+    against the brute-force O(n·m) host oracle on the same data.
+    """
+    from repro.index import SpatialIndex
+
+    na, nb = (300, 200) if TINY else (2000, 1500)
+    da = datasets.uniform_squares(na, seed=1)
+    db = datasets.exponential_squares(nb, seed=2)
+    left = SpatialIndex.build(da, structure="mqr", backend="pallas")
+    right = SpatialIndex.build(db, structure="mqr", backend="pallas")
+    compact = SpatialIndex.build(
+        da, structure="mqr", backend="pallas", precision="compact"
+    )
+
+    res = left.join(right)
+    a32, b32 = np.asarray(da, np.float32), np.asarray(db, np.float32)
+
+    def brute():
+        return (
+            (a32[:, None, 0] <= b32[None, :, 2])
+            & (b32[None, :, 0] <= a32[:, None, 2])
+            & (a32[:, None, 1] <= b32[None, :, 3])
+            & (b32[None, :, 1] <= a32[:, None, 3])
+        )
+
+    t_j = _timeit(lambda: left.join(right).pairs, iters=3)
+    t_c = _timeit(lambda: compact.join(right).pairs, iters=3)
+    t_b = _timeit(brute, iters=3)
+    return [
+        (t_j, {"impl": "join-pair-sweep", "n": f"{na}x{nb}",
+               "joins_per_sec": round(1 / t_j, 2),
+               "pairs": res.n_pairs,
+               "pair_tests": int(res.pair_visits.sum())}),
+        (t_c, {"impl": "join-pair-sweep-compact", "n": f"{na}x{nb}",
+               "joins_per_sec": round(1 / t_c, 2)}),
+        (t_b, {"impl": "join-brute-oracle", "n": f"{na}x{nb}",
+               "joins_per_sec": round(1 / t_b, 2),
+               "pair_tests": na * nb}),
+    ]
+
+
+def bench_moving():
+    """Moving-object workload: delta-buffer churn vs naive rebuilds.
+
+    Rows: ticks/sec for the live-update path (batch delete + insert per
+    tick, continuous region + join queries) against the rebuild-per-tick
+    baseline on the identical seeded motion.
+    """
+    from repro.launch.moving import MovingConfig, MovingWorkload
+
+    ticks = 5 if TINY else 50
+    cfg = MovingConfig(n_objects=64 if TINY else 256, moves_per_tick=8,
+                       query_every=5, seed=1)
+    live = MovingWorkload(cfg, backend="pallas", capacity=128)
+    t0 = time.time()
+    live.run(ticks)
+    t_live = time.time() - t0
+
+    base = MovingWorkload(cfg, backend="pallas", rebuild_per_tick=True)
+    t0 = time.time()
+    base.run(ticks)
+    t_base = time.time() - t0
+    return [
+        (t_live, {"impl": "moving-delta-buffer", "ticks": ticks,
+                  "ticks_per_sec": round(ticks / t_live, 2),
+                  "merges": live.query_index.stats.flushes,
+                  "joins": live.query_index.stats.joins}),
+        (t_base, {"impl": "moving-rebuild-per-tick", "ticks": ticks,
+                  "ticks_per_sec": round(ticks / t_base, 2),
+                  "speedup_vs_rebuild": round(t_base / t_live, 2)}),
+    ]
+
+
 JAX_BENCHES = {
     "jax_flat_search": bench_flat_search,
     "jax_pyramid_build": bench_pyramid_build,
@@ -400,5 +477,7 @@ JAX_BENCHES = {
     "index_api": bench_index_api,
     "live_update": bench_live_update,
     "durability": bench_durability,
+    "join": bench_join,
+    "moving": bench_moving,
     "mqr_sparse_vs_dense_decode": bench_mqr_sparse_vs_dense_decode,
 }

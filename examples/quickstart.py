@@ -155,6 +155,34 @@ def main():
     finally:
         shutil.rmtree(root, ignore_errors=True)
 
+    # 9. Batch spatial join + the moving-object workload (DESIGN.md §10):
+    # both trees sweep together in one fused launch, and the pair set is
+    # bit-identical to the brute-force nested-loop oracle — even while a
+    # churning delta buffer holds un-merged inserts and tombstones.
+    from repro.launch.moving import MovingConfig, MovingWorkload
+
+    w = MovingWorkload(
+        MovingConfig(n_objects=64, moves_per_tick=8, query_every=5, seed=0),
+        backend="pallas", capacity=96,
+    )
+    t0 = time.time()
+    last = w.run(15)   # 15 ticks: 120 deletes + 120 inserts, 3 query ticks
+    dt = time.time() - t0
+    a = w.query_index._updates.mbr_table.astype(np.float32)
+    z = np.asarray(w.zones.artifacts.mbrs, np.float32)
+    brute = ((a[:, None, 0] <= z[None, :, 2]) & (z[None, :, 0] <= a[:, None, 2])
+             & (a[:, None, 1] <= z[None, :, 3]) & (z[None, :, 1] <= a[:, None, 3]))
+    brute &= w.query_index._updates.alive[:, None]
+    assert np.array_equal(last.join.pairs, brute)
+    print(f"\nmoving objects: 15 ticks in {dt:.2f}s "
+          f"({w.query_index.stats.inserts} inserts, "
+          f"{w.query_index.stats.deletes} deletes, "
+          f"{w.query_index.stats.flushes} merges); final join: "
+          f"{last.join.n_pairs} object×zone pairs from "
+          f"{int(last.join.pair_visits.sum())} pair tests "
+          f"(brute force: {brute.size}) — pair set identical to the "
+          f"nested-loop oracle")
+
 
 if __name__ == "__main__":
     main()

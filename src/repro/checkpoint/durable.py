@@ -365,6 +365,14 @@ class DurableIndex:
     def knn(self, points, k: int):
         return self.index.knn(points, k)
 
+    def join(self, other, predicate: str = "intersects"):
+        """Tree-vs-tree join of the durable live set against another
+        index (DESIGN.md §10); joins are read-only, so no WAL traffic —
+        the other side may be a plain or durable index."""
+        return self.index.join(
+            getattr(other, "index", other), predicate=predicate
+        )
+
 
 def live_ids(d: "DurableIndex") -> np.ndarray:
     """Global ids of the durable live set (sorted) — the unit the crash

@@ -353,6 +353,30 @@ def level_schedule(flat: FlatTree) -> LevelSchedule:
     )
 
 
+def ancestor_chains(schedule: LevelSchedule, k_levels: int) -> np.ndarray:
+    """Per-entry ancestor slots: ``(E, k_levels)`` int32, column ``k`` =
+    the slot of entry ``e``'s ancestor node at level ``k``.
+
+    The tree-vs-tree join epilogue (DESIGN.md §10) looks each entry pair
+    up in the synchronized pair mask at ``k = min(level_a, level_b)``;
+    these chains are the row/column coordinates of that lookup.  Columns
+    past an entry's own level are left 0 — the join never reads them
+    (``min`` clamps to the shallower entry).  Vectorized bottom-up walk:
+    O(E · max_level) numpy, no per-entry Python loop.
+    """
+    levels = np.asarray(schedule.obj_level, np.int64)
+    e = levels.shape[0]
+    max_l = int(levels.max(initial=0))
+    chains = np.zeros((e, max(k_levels, max_l + 1)), np.int64)
+    cur = np.asarray(schedule.obj_slot, np.int64).copy()
+    chains[np.arange(e), levels] = cur
+    for t in range(max_l, 0, -1):
+        step = levels >= t  # entries whose chain passes through level t
+        cur = np.where(step, schedule.parent[t][cur], cur)
+        chains[:, t - 1] = np.where(levels >= t - 1, cur, 0)
+    return chains[:, :k_levels].astype(np.int32)
+
+
 def pyramid_schedule(pyr, obj_mbrs: np.ndarray) -> LevelSchedule:
     """Lower a :class:`repro.core.bulk.GroupPyramid` to the level schedule.
 

@@ -20,6 +20,7 @@ from .api import (
     RegionResult,
     SpatialIndex,
 )
+from .join import JoinResult
 from .registry import (
     BackendSpec,
     advertised_pairs,
@@ -33,6 +34,7 @@ __all__ = [
     "AccessStats",
     "BackendSpec",
     "BuildArtifacts",
+    "JoinResult",
     "KNNResult",
     "MergePolicy",
     "RegionResult",

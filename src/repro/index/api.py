@@ -172,6 +172,7 @@ class AccessStats:
     launches: int = 0        # device dispatches (0 for the host backend)
     knn_queries: int = 0
     knn_rounds: int = 0      # expanding-radius region rounds issued
+    joins: int = 0           # tree-vs-tree join calls (DESIGN.md §10)
     # live-update ledger (DESIGN.md §8)
     inserts: int = 0
     deletes: int = 0
@@ -766,6 +767,27 @@ class SpatialIndex:
     def count(self, queries) -> np.ndarray:
         """(Q,) number of objects overlapping each query rectangle."""
         return self.region(queries).counts
+
+    def join(self, other: "SpatialIndex", predicate: str = "intersects"):
+        """Batch spatial join against another index (DESIGN.md §10).
+
+        Sweeps both indexes' level schedules against each other in one
+        launch (this index's backend/precision picks the engine; the
+        ``serve`` backend walks its degradation ladder) and returns a
+        :class:`repro.index.join.JoinResult` whose pair-set is
+        bit-identical to the brute-force nested-loop oracle over the two
+        live object sets — including mid-buffer live state and
+        tombstones on either side.  Only ``predicate="intersects"``
+        (closed-boundary overlap, the paper's region semantics) is
+        defined.
+        """
+        from .join import join_impl
+
+        result, launches = join_impl(self, other, predicate)
+        self.stats.joins += 1
+        self.stats.record(1, result.pair_visits.sum(), launches)
+        self.stats.delta_accesses += int(result.delta_tests.sum())
+        return result
 
     def knn(self, points, k: int) -> KNNResult:
         """k nearest neighbours of each (Q, 2) point, by MBR min-distance.

@@ -1,0 +1,254 @@
+"""Batch tree-vs-tree spatial join behind the ``SpatialIndex`` façade.
+
+``left.join(right)`` pairs two indexes — any structure × any structure,
+live or pristine — through one levelized pair sweep (DESIGN.md §10):
+
+* both sides' :class:`~repro.core.flat.LevelSchedule`s are trimmed to
+  their common depth ``K = min(levels_a, levels_b)`` and swept
+  level-synchronized (the fused Pallas kernel
+  :func:`repro.kernels.ops.fused_join`, its plain-XLA ``lax`` twin, or
+  the pure-numpy ``host`` twin — the LEFT index's backend picks);
+* ``precision="compact"`` (on the left index) quantizes BOTH sides'
+  tiles outward onto one JOINT uint16 grid spanning the union of the two
+  live object sets — integer overlap is only meaningful on a shared
+  grid; node boxes of stale (tombstoned) base objects may poke past the
+  joint domain, which the clip-monotone argument of
+  :func:`repro.kernels.quantize.quantize_rows` covers;
+* live state rides along exactly like ``fused_search_live``: the frozen
+  base×base structure goes through the sweep, delta-buffer rows on
+  either side become unconditional candidate rows (a flat cross-scan —
+  the buffer is O(capacity), so structural pruning buys nothing the
+  exact pass doesn't), and tombstones are masked in the epilogue;
+* every engine ends with the same exact float32 object-MBR confirming
+  pass, so the returned pair-set is bit-identical to the brute-force
+  O(n·m) nested-loop oracle on every structure × backend × precision
+  (tests/test_join.py) — precision and pruning quality only move the
+  pair-visit ledger.
+
+The ``serve`` backend walks the degradation ladder (pallas → lax →
+host) per join call, honouring any bound :class:`repro.ft.FaultPlan`,
+and records rung dispatches / degraded calls in the index's
+:class:`~repro.index.api.AccessStats` — the same health ledger the
+region path uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import flat
+from repro.core.flat import CELLS
+
+PREDICATES = ("intersects",)
+
+#: degradation-ladder rung order for serve-backend joins
+JOIN_LADDER = ("pallas", "lax", "host")
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinResult:
+    """Result of ``left.join(right)``.
+
+    pairs:       (id_space_left, id_space_right) bool — pair (i, j) is
+                 True iff live object ``i`` of the left index and live
+                 object ``j`` of the right index overlap (closed
+                 boundaries, the paper's region semantics).
+    pair_visits: (K + 2,) int64 — tile-pair tests per synchronized sweep
+                 level (the join analogue of the paper's disk accesses),
+                 then one column per side counting the delta-buffer
+                 cross-scan's exact tests.
+    base_levels: K, the synchronized sweep depth (== min of the two
+                 schedules' level counts).
+    """
+
+    pairs: np.ndarray
+    pair_visits: np.ndarray
+    base_levels: int
+
+    @property
+    def n_pairs(self) -> int:
+        return int(self.pairs.sum())
+
+    @property
+    def sweep_visits(self) -> np.ndarray:
+        """Per-level tile-pair tests of the structure sweep alone."""
+        return self.pair_visits[: self.base_levels]
+
+    @property
+    def delta_tests(self) -> np.ndarray:
+        """(2,) exact tests spent on (left, right) delta-buffer rows."""
+        return self.pair_visits[self.base_levels:]
+
+    def pair_list(self) -> np.ndarray:
+        """(P, 2) int64 (left_id, right_id) pairs, lexicographic."""
+        return np.argwhere(self.pairs)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Side:
+    """One join operand lowered to the kernel's view of it."""
+
+    sched: flat.LevelSchedule
+    table: np.ndarray      # (N, 4) float32 global-id MBR table
+    alive: np.ndarray      # (N,) bool
+    delta: np.ndarray      # (N,) bool — ids in the delta buffer
+    entry_gid: np.ndarray  # (E,) int32 — schedule entries -> global ids
+
+
+def _side_state(idx) -> _Side:
+    """Lower one index (pristine or live) to its join-side arrays.
+
+    Live indexes expose the frozen base schedule for the structure sweep
+    (delta rows become unconditional candidates), the full global-id MBR
+    table, the tombstone mask, and the base-entry -> global-id remap —
+    the same decomposition ``UpdateLog.augmented`` feeds the live region
+    sweep.
+    """
+    log = idx._updates
+    sched = idx.artifacts.schedule
+    if log is None:
+        table = np.asarray(idx.artifacts.mbrs, np.float32)
+        n = table.shape[0]
+        return _Side(
+            sched=sched,
+            table=table,
+            alive=np.ones((n,), bool),
+            delta=np.zeros((n,), bool),
+            entry_gid=np.asarray(sched.obj_id, np.int32),
+        )
+    return _Side(
+        sched=sched,
+        table=log.mbr_table.astype(np.float32),
+        alive=log.alive.copy(),
+        delta=log.delta_id_mask(),
+        entry_gid=log.base_gids[sched.obj_id].astype(np.int32),
+    )
+
+
+def _joint_grid(side_a: _Side, side_b: _Side):
+    """Shared uint16 grid over the union of both LIVE object sets —
+    coordinate-major (origin, inv_cell) exactly like
+    :func:`repro.kernels.quantize.grid_params`, but spanning two
+    indexes.  Integer pair overlap is only conservative when both sides
+    round outward onto the SAME grid."""
+    rows = np.concatenate(
+        [side_a.table[side_a.alive], side_b.table[side_b.alive]], axis=0
+    ).astype(np.float64)
+    if rows.shape[0] == 0:  # both sides fully tombstoned: any grid works
+        return (np.zeros((4,), np.float32), np.ones((4,), np.float32))
+    lo = rows[:, :2].min(axis=0)
+    hi = rows[:, 2:].max(axis=0)
+    with np.errstate(divide="ignore"):
+        inv = np.minimum(CELLS / np.maximum(hi - lo, 0.0), 1e30)
+    origin = np.concatenate([lo, lo]).astype(np.float32)
+    inv_cell = np.concatenate([inv, inv]).astype(np.float32)
+    return origin, inv_cell
+
+
+def _quantize_cm(mbr_cm: np.ndarray, origin, inv_cell) -> np.ndarray:
+    """(K, 4, W) float32 level tiles -> uint16 on the joint grid, via the
+    row quantizer (identical float32 arithmetic to the schedule path)."""
+    from repro.kernels import ops
+
+    k, _, w = mbr_cm.shape
+    rows = mbr_cm.transpose(0, 2, 1).reshape(-1, 4)
+    q = ops.quantize_rows(rows, origin, inv_cell)
+    return np.ascontiguousarray(q.reshape(k, w, 4).transpose(0, 2, 1))
+
+
+def _dispatch(rung: str, args, *, block_w: int, interpret):
+    """Run one ladder rung over the prepared join arrays.
+
+    Returns ``(pairs, visits, launches)`` as numpy."""
+    if rung == "pallas":
+        from repro.kernels import ops
+
+        pairs, visits = ops.fused_join(
+            *args, block_a=block_w, block_b=block_w, interpret=interpret
+        )
+        launches = 1
+    elif rung == "lax":
+        from repro.kernels import fallback
+
+        pairs, visits = fallback.fused_join_lax(*args)
+        launches = 0
+    elif rung == "host":
+        from repro.kernels import fallback
+
+        pairs, visits = fallback.fused_join_np(*args)
+        launches = 0
+    else:  # pragma: no cover
+        raise ValueError(f"unknown join rung {rung!r}")
+    return np.asarray(pairs), np.asarray(visits, np.int64), launches
+
+
+def join_impl(left, right, predicate: str = "intersects"):
+    """Execute ``left.join(right)``; returns ``(JoinResult, launches)``.
+
+    The left index picks the engine (backend, precision, block size,
+    fault plan); both sides contribute structure + live state.
+    """
+    if predicate not in PREDICATES:
+        raise ValueError(
+            f"unknown join predicate {predicate!r}; expected one of "
+            f"{PREDICATES}"
+        )
+    side_a = _side_state(left)
+    side_b = _side_state(right)
+    k = min(side_a.sched.levels, side_b.sched.levels)
+
+    a_cm = side_a.sched.mbr_cm[:k]
+    b_cm = side_b.sched.mbr_cm[:k]
+    precision = left._backend_opts.get("precision", "float32")
+    if precision == "compact":
+        origin, inv_cell = _joint_grid(side_a, side_b)
+        a_cm = _quantize_cm(a_cm, origin, inv_cell)
+        b_cm = _quantize_cm(b_cm, origin, inv_cell)
+
+    args = (
+        a_cm, side_a.sched.parent[:k],
+        flat.ancestor_chains(side_a.sched, k),
+        side_a.sched.obj_level, side_a.entry_gid,
+        b_cm, side_b.sched.parent[:k],
+        flat.ancestor_chains(side_b.sched, k),
+        side_b.sched.obj_level, side_b.entry_gid,
+        side_a.table, side_b.table,
+        side_a.alive, side_b.alive,
+        side_a.delta, side_b.delta,
+    )
+    block_w = int(left._backend_opts.get("block_w", 128))
+    interpret = left._backend_opts.get("interpret")
+
+    backend = left.spec.name
+    if backend != "serve":
+        rung = backend if backend in JOIN_LADDER else "host"
+        pairs, visits, launches = _dispatch(
+            rung, args, block_w=block_w, interpret=interpret
+        )
+        return JoinResult(pairs, visits, base_levels=k), launches
+
+    # serve: walk the degradation ladder, same health ledger as region
+    plan = left._fault_plan
+    last_err = None
+    for i, rung in enumerate(JOIN_LADDER):
+        try:
+            if plan is not None:
+                plan.launch(rung)
+            pairs, visits, launches = _dispatch(
+                rung, args, block_w=block_w, interpret=interpret
+            )
+        except Exception as e:  # noqa: BLE001 — any rung failure degrades
+            left.stats.launch_failures += 1
+            last_err = e
+            continue
+        left.stats.rung_dispatches[rung] = (
+            left.stats.rung_dispatches.get(rung, 0) + 1
+        )
+        if i > 0:
+            left.stats.degraded_batches += 1
+        return JoinResult(pairs, visits, base_levels=k), launches
+    raise RuntimeError(
+        f"every join ladder rung failed; last error: {last_err!r}"
+    )

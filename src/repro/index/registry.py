@@ -12,6 +12,12 @@ pull the QUANTIZED lowering — the conservative uint16 tile form of the
 schedule (DESIGN.md §7) — via ``BuildArtifacts.quantized``; like every
 lowering it is computed once and cached, so float32 and compact engines
 over the same build share one quantization.
+
+The backend name also selects the join engine: ``SpatialIndex.join``
+routes on the LEFT index's spec (``index/join.py`` — host/lax/pallas
+pair-sweep twins, serve walking the degradation ladder), so registering
+a backend here serves region/point/knn AND tree-vs-tree joins
+(DESIGN.md §10) with one name.
 """
 
 from __future__ import annotations

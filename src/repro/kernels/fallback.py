@@ -279,6 +279,116 @@ def fused_search_compact_live_np(
     return hits & np.asarray(alive, bool)[None, :], visits
 
 
+# ---------------------------------------------------------------------------
+# tree-vs-tree join twins (DESIGN.md §10): same rungs for SpatialIndex.join
+# ---------------------------------------------------------------------------
+
+
+def _pair_sweep_jnp(a_cm, a_parent, b_cm, b_parent):
+    """(K, Wa, Wb) pair-active mask — jnp twin of ``join_scan.pair_sweep``.
+
+    Same recurrence: a node pair survives level ``k`` iff its parent pair
+    survived ``k-1`` and the two level-``k`` MBRs overlap (level 0 tests
+    the root-pair overlap directly — conservative for every schedule
+    flavour).  Tiles cast to float32 so uint16 joint-grid tiles take the
+    identical path."""
+    k_levels = a_cm.shape[0]
+    a = jnp.asarray(a_cm).astype(jnp.float32)
+    b = jnp.asarray(b_cm).astype(jnp.float32)
+    acts = []
+    prev = None
+    for k in range(k_levels):
+        al, bl = a[k], b[k]  # (4, Wa) / (4, Wb)
+        ov = (
+            (al[0][:, None] <= bl[2][None, :])
+            & (bl[0][None, :] <= al[2][:, None])
+            & (al[1][:, None] <= bl[3][None, :])
+            & (bl[1][None, :] <= al[3][:, None])
+        )
+        if k == 0:
+            act = ov
+        else:
+            act = ov & jnp.take(
+                jnp.take(prev, a_parent[k], axis=0), b_parent[k], axis=1
+            )
+        acts.append(act)
+        prev = act
+    return jnp.stack(acts)
+
+
+def _pair_sweep_np(a_cm, a_parent, b_cm, b_parent):
+    k_levels, _, wa = a_cm.shape
+    wb = b_cm.shape[2]
+    a = np.asarray(a_cm, np.float32)
+    b = np.asarray(b_cm, np.float32)
+    acts = np.zeros((k_levels, wa, wb), bool)
+    for k in range(k_levels):
+        al, bl = a[k], b[k]
+        ov = (
+            (al[0][:, None] <= bl[2][None, :])
+            & (bl[0][None, :] <= al[2][:, None])
+            & (al[1][:, None] <= bl[3][None, :])
+            & (bl[1][None, :] <= al[3][:, None])
+        )
+        if k == 0:
+            acts[k] = ov
+        else:
+            acts[k] = ov & acts[k - 1][a_parent[k]][:, b_parent[k]]
+    return acts
+
+
+def fused_join_lax(
+    a_cm, a_parent, a_anc, a_level, a_gid,
+    b_cm, b_parent, b_anc, b_level, b_gid,
+    table_a, table_b, alive_a, alive_b, delta_a, delta_b,
+    *, block_a=128, block_b=128, interpret=None,
+):
+    """lax rung of :func:`repro.kernels.ops.fused_join`: plain-XLA pair
+    sweep + the shared candidate/confirm epilogue — pair sets AND pair-
+    visit ledger bit-identical to the fused kernel."""
+    del block_a, block_b, interpret  # kernel-only tuning knobs
+    from .join_scan import join_epilogue
+
+    act = _pair_sweep_jnp(a_cm, a_parent, b_cm, b_parent)
+    return join_epilogue(
+        act,
+        jnp.asarray(a_anc), jnp.asarray(a_level), jnp.asarray(a_gid),
+        jnp.asarray(b_anc), jnp.asarray(b_level), jnp.asarray(b_gid),
+        jnp.asarray(table_a), jnp.asarray(table_b),
+        jnp.asarray(alive_a), jnp.asarray(alive_b),
+        jnp.asarray(delta_a), jnp.asarray(delta_b),
+    )
+
+
+def fused_join_np(
+    a_cm, a_parent, a_anc, a_level, a_gid,
+    b_cm, b_parent, b_anc, b_level, b_gid,
+    table_a, table_b, alive_a, alive_b, delta_a, delta_b,
+    *, block_a=128, block_b=128, interpret=None,
+):
+    """host rung: the same join in pure numpy (no device runtime)."""
+    del block_a, block_b, interpret
+    from .join_scan import join_epilogue
+
+    act = _pair_sweep_np(
+        np.asarray(a_cm), np.asarray(a_parent),
+        np.asarray(b_cm), np.asarray(b_parent),
+    )
+    return join_epilogue(
+        act,
+        np.asarray(a_anc), np.asarray(a_level), np.asarray(a_gid),
+        np.asarray(b_anc), np.asarray(b_level), np.asarray(b_gid),
+        np.asarray(table_a, np.float32), np.asarray(table_b, np.float32),
+        np.asarray(alive_a, bool), np.asarray(alive_b, bool),
+        np.asarray(delta_a, bool), np.asarray(delta_b, bool),
+    )
+
+
+# degradation-ladder rung -> join twin; the pallas rung is
+# ``repro.kernels.ops.fused_join`` itself.
+JOIN_FALLBACKS = {"lax": fused_join_lax, "host": fused_join_np}
+
+
 # variant key -> (lax rung fn, host rung fn); the server picks by the
 # same (precision, live) pair it used to choose the fused kernel.
 FALLBACKS = {

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from . import ref
 from .build import device_schedule as _device_schedule
 from .flash_attention import flash_attention as _flash
+from .join_scan import _fused_join
+from .join_scan import pair_sweep as _pair_sweep
 from .mbr_scan import mbr_scan as _mbr_scan
 from .mqr_sparse_attention import mqr_sparse_attention as _sparse
 from .pyramid_scan import (
@@ -132,6 +134,52 @@ def fused_search_compact_live(
         block_w=block_w,
         root_unconditional=root_unconditional,
         interpret=interpret,
+    )
+
+
+def fused_join(
+    a_cm, a_parent, a_anc, a_level, a_gid,
+    b_cm, b_parent, b_anc, b_level, b_gid,
+    table_a, table_b, alive_a, alive_b, delta_a, delta_b,
+    *,
+    block_a: int = 128,
+    block_b: int = 128,
+    interpret: bool | None = None,
+):
+    """Tree-vs-tree spatial join: one fused pair-sweep launch + exact
+    confirming epilogue (DESIGN.md §10).
+
+    Both sides arrive as their first ``K = min(levels_a, levels_b)``
+    schedule levels (float32 tiles, or uint16 tiles quantized onto one
+    JOINT grid for ``precision="compact"``), per-entry ancestor chains
+    from :func:`repro.core.flat.ancestor_chains`, global-id float32 MBR
+    tables, tombstone ``alive`` masks, and delta-buffer candidate row
+    masks.  Returns ``(pairs (Na, Nb) bool, visits (K + 2,) int32)`` —
+    the pair set is bit-identical to the brute-force nested-loop oracle
+    on every precision; only ``visits`` (tile-pair tests per level, plus
+    one delta cross-scan column per side) depends on tile precision.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    return _fused_join(
+        a_cm, a_parent, a_anc, a_level, a_gid,
+        b_cm, b_parent, b_anc, b_level, b_gid,
+        table_a, table_b, alive_a, alive_b, delta_a, delta_b,
+        block_a=block_a,
+        block_b=block_b,
+        interpret=interpret,
+    )
+
+
+def pair_sweep(a_cm, a_parent, b_cm, b_parent, *, block_a: int = 128,
+               block_b: int = 128, interpret: bool | None = None):
+    """Raw (K, Wa, Wb) pair-active mask of the synchronized level sweep —
+    the join kernel without its epilogue, for tests and benches."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _pair_sweep(
+        a_cm, a_parent, b_cm, b_parent,
+        block_a=block_a, block_b=block_b, interpret=interpret,
     )
 
 

@@ -357,6 +357,17 @@ class UpdateLog:
             self.delta_valid[:, None], self.delta_mbrs, NEVER_MBR[None, :]
         ).astype(np.float32)
 
+    def delta_id_mask(self) -> np.ndarray:
+        """(id_capacity,) bool — global ids currently living in the delta
+        buffer.  The join path (DESIGN.md §10) treats every pair touching
+        one of these rows as a structure-sweep candidate (a flat cross-
+        scan: the buffer is O(capacity) rows, so the exact confirming
+        pass is the whole cost anyway)."""
+        mask = np.zeros((self.id_capacity,), bool)
+        if self.delta_valid.any():
+            mask[self.delta_gids[self.delta_valid]] = True
+        return mask
+
     def _delta_geometry(self):
         """Tile the capacity across flat levels of the base width."""
         w = self.base.schedule.width

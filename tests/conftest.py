@@ -1,4 +1,50 @@
+import functools
 import os
 import sys
+import zlib
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import datasets  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# Shared random-MBR dataset builders (one copy for every suite).
+#
+# Seeds derive from (module, kind, salt) so each consuming module gets its
+# own deterministic stream: suites no longer share module-level RNG state
+# or silently reuse one another's arrays, and adding a dataset to one
+# module cannot reorder another's data.  ``salt`` is for CI matrix legs
+# (e.g. REPRO_JOIN_SEED) that want whole fresh datasets per leg.
+# ---------------------------------------------------------------------------
+
+DATASET_KINDS = ("exponential_squares", "uniform_points", "uniform_squares")
+
+
+def derived_seed(module: str, tag: str, salt: int = 0) -> int:
+    """Deterministic per-(module, tag, salt) seed, stable across runs."""
+    return zlib.crc32(f"{module}:{tag}:{salt}".encode()) % (2 ** 31)
+
+
+@functools.lru_cache(maxsize=None)
+def mbr_dataset(module: str, kind: str, n: int, salt: int = 0) -> np.ndarray:
+    """Build (and cache) one of the canonical random-MBR datasets —
+    ``kind`` is a ``repro.core.datasets`` builder name."""
+    return getattr(datasets, kind)(n, seed=derived_seed(module, kind, salt))
+
+
+@functools.lru_cache(maxsize=None)
+def dataset_queries(module: str, kind: str, n: int, n_queries: int = 6,
+                    salt: int = 0) -> np.ndarray:
+    """Region queries targeted at the matching cached dataset."""
+    return datasets.region_queries(
+        mbr_dataset(module, kind, n, salt), n_queries,
+        seed=derived_seed(module, f"{kind}/queries", salt),
+    ).astype(np.float32)
+
+
+def f32_exact(a) -> np.ndarray:
+    """Snap coordinates to float32-representable values so host (f64)
+    and device (f32) comparisons agree bit-for-bit at box boundaries."""
+    return np.float64(np.float32(a))

@@ -13,24 +13,24 @@ import re
 import numpy as np
 import pytest
 
-from repro.core import datasets
+import conftest
 from repro.core import mbr as M
 from repro.index import SpatialIndex, advertised_pairs, backend_names, get_backend
 from repro.index.knn import _mindist_np
 
+# shared builders live in tests/conftest.py; sizes are this module's own
 DATASETS = {
-    "uniform_squares": lambda: datasets.uniform_squares(250, seed=5),
+    "uniform_squares": 250,
     # the paper's zero-overlap case: degenerate point MBRs (§4)
-    "uniform_points": lambda: datasets.uniform_points(220, seed=2),
-    "exponential_squares": lambda: datasets.exponential_squares(200, seed=9),
+    "uniform_points": 220,
+    "exponential_squares": 200,
 }
 STRUCTURES = ("mqr", "rtree", "pyramid")
 BACKENDS = ("host", "lax", "pallas", "serve")
 
 
-@functools.lru_cache(maxsize=None)
 def _data(name: str) -> np.ndarray:
-    return DATASETS[name]()
+    return conftest.mbr_dataset("test_index_api", name, DATASETS[name])
 
 
 @functools.lru_cache(maxsize=None)
@@ -38,9 +38,8 @@ def _host_index(structure: str, ds: str) -> SpatialIndex:
     return SpatialIndex.build(_data(ds), structure=structure, backend="host")
 
 
-@functools.lru_cache(maxsize=None)
 def _queries(ds: str) -> np.ndarray:
-    return datasets.region_queries(_data(ds), 6, seed=6).astype(np.float32)
+    return conftest.dataset_queries("test_index_api", ds, DATASETS[ds])
 
 
 @functools.lru_cache(maxsize=None)

@@ -11,17 +11,13 @@ epoch-invalidated so it never serves stale results after a mutation.
 import numpy as np
 import pytest
 
+import conftest
+from conftest import f32_exact
 from repro.core import datasets
 from repro.index import MergePolicy, SpatialIndex
 from repro.update import oracle
 
 BACKENDS = ("host", "lax", "pallas", "serve")
-
-
-def f32_exact(a):
-    """Snap coordinates to float32-representable values so host (f64)
-    and device (f32) comparisons agree bit-for-bit at box boundaries."""
-    return np.float64(np.float32(a))
 
 
 def assert_matches_oracle(idx, queries, *, structure=""):
@@ -50,7 +46,8 @@ def assert_matches_oracle(idx, queries, *, structure=""):
 
 def test_mixed_workload_matches_oracle_on_every_backend():
     rng = np.random.default_rng(0)
-    data = f32_exact(datasets.uniform_squares(400, seed=1))
+    data = f32_exact(conftest.mbr_dataset("test_live_update",
+                                          "uniform_squares", 400))
     # tombstone trigger relaxed so checkpoints land mid-buffer; merges
     # still happen through buffer/id-space overflow every few rounds
     idx = SpatialIndex.build(

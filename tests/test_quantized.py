@@ -12,16 +12,23 @@ import pytest
 
 import jax.numpy as jnp
 
+import conftest
 from repro.core import datasets, flat, mqrtree, rtree
 from repro.core.flat import CELLS, Q_NEVER_MBR
 from repro.index import SpatialIndex
 from repro.kernels import ops
 from repro.kernels import quantize as kq
 
+# shared builders live in tests/conftest.py; sizes are this module's own
+_SIZES = {
+    "uniform_squares": 300,
+    "uniform_points": 256,
+    "exponential_squares": 250,
+}
 DATASETS = {
-    "uniform_squares": lambda: datasets.uniform_squares(300, seed=5),
-    "uniform_points": lambda: datasets.uniform_points(256, seed=2),
-    "exponential_squares": lambda: datasets.exponential_squares(250, seed=9),
+    name: (lambda name=name: conftest.mbr_dataset(
+        "test_quantized", name, _SIZES[name]))
+    for name in _SIZES
 }
 
 
