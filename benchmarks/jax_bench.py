@@ -468,6 +468,48 @@ def bench_moving():
     ]
 
 
+def bench_serving():
+    """Latency under open-loop load through the serving front end.
+
+    One row per offered-QPS level: p50/p99/p99.9 completion latency of
+    single-request arrivals coalesced into ``query_block`` batches, plus
+    shed / SLO-violation counters — the latency-vs-load curve the
+    front end exists for (DESIGN.md §11).  Arrivals are Poisson and
+    latency is measured from the SCHEDULED arrival, so the curve is
+    free of coordinated omission.
+    """
+    from repro.launch.loadgen import demo_dataset
+    from repro.serve import ServerConfig, ServingFrontEnd
+    from repro.serve.loadgen import run_sweep
+
+    levels = [25.0, 100.0, 400.0] if TINY else [50.0, 200.0, 800.0]
+    duration = 0.4 if TINY else 2.0
+    data = {"demo": demo_dataset(256 if TINY else 4096)}
+    cfg = ServerConfig.from_dict({
+        "tenants": [{"name": "demo", "backend": "serve"}],
+        "query_block": 8 if TINY else 16,
+    })
+
+    def make_front():
+        return ServingFrontEnd.build(cfg, data), "demo"
+
+    rows = run_sweep(make_front, levels, duration=duration, seed=0)
+    return [
+        (row["mean_ms"] / 1e3,
+         {"impl": "serve-frontend",
+          "qps_offered": round(row["qps_offered"], 1),
+          "qps_achieved": round(row["qps_achieved"], 1),
+          "p50_ms": round(row["p50_ms"], 3),
+          "p99_ms": round(row["p99_ms"], 3),
+          "p999_ms": round(row["p999_ms"], 3),
+          "shed": row["shed"],
+          "slo_violations": row["slo_violations"],
+          "avg_batch": row["avg_batch"],
+          "deadline_launches": row["deadline_launches"]})
+        for row in rows
+    ]
+
+
 JAX_BENCHES = {
     "jax_flat_search": bench_flat_search,
     "jax_pyramid_build": bench_pyramid_build,
@@ -479,5 +521,6 @@ JAX_BENCHES = {
     "durability": bench_durability,
     "join": bench_join,
     "moving": bench_moving,
+    "serving": bench_serving,
     "mqr_sparse_vs_dense_decode": bench_mqr_sparse_vs_dense_decode,
 }

@@ -14,14 +14,25 @@ _INDEX_EXPORTS = (
     "advertised_pairs",
 )
 
+_SERVE_EXPORTS = (
+    "ServingFrontEnd",
+    "ServerConfig",
+)
+
 
 def __getattr__(name):
     if name in _INDEX_EXPORTS:
         from repro import index as _index
 
         return getattr(_index, name)
+    if name in _SERVE_EXPORTS:
+        from repro import serve as _serve
+
+        return getattr(_serve, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def __dir__():
-    return sorted(list(globals()) + list(_INDEX_EXPORTS))
+    return sorted(
+        list(globals()) + list(_INDEX_EXPORTS) + list(_SERVE_EXPORTS)
+    )

@@ -168,6 +168,41 @@ class DurableIndex:
             self.bind_fault_plan(fault_plan)
         return self
 
+    @classmethod
+    def open(cls, root, mbrs=None, *, structure: str = "mqr",
+             backend: str = "pallas", admission: str = "merge",
+             sync: bool = True, keep: int = 1, fault_plan=None,
+             **opts) -> "DurableIndex":
+        """Recover ``root`` if it holds a complete snapshot generation,
+        else create it fresh from ``mbrs``.
+
+        This is the serving front end's restart path: a tenant declared
+        with ``durable_root`` comes back with its last durable live set
+        on every process start, and bootstraps from its dataset only the
+        first time.  ``structure`` applies only to the create path — on
+        recovery the structure is whatever the snapshot recorded.
+        """
+        root = pathlib.Path(root)
+        if cls._latest_generation(root) is not None:
+            # build-time options (structure shape, delta capacity, merge
+            # policy) are recorded IN the snapshot — only backend options
+            # may pass through to recovery
+            build_only = ("capacity", "merge", "levels", "max_entries",
+                          "build")
+            backend_opts = {
+                k: v for k, v in opts.items() if k not in build_only
+            }
+            return cls.recover(root, backend=backend, admission=admission,
+                               sync=sync, keep=keep, fault_plan=fault_plan,
+                               **backend_opts)
+        if mbrs is None:
+            raise FileNotFoundError(
+                f"{root}: nothing to recover and no mbrs to create from"
+            )
+        return cls.create(mbrs, root, structure=structure, backend=backend,
+                          admission=admission, sync=sync, keep=keep,
+                          fault_plan=fault_plan, **opts)
+
     @staticmethod
     def _latest_generation(root: pathlib.Path) -> Optional[int]:
         gens = []

@@ -59,10 +59,12 @@ class FaultPlan:
     torn_write: bool = False
     fail_launches: int = 0
     fail_rungs: Tuple[str, ...] = ("pallas",)
+    fail_from_launch: Optional[int] = None
     slow_merge: float = 0.0
     current_op: int = dataclasses.field(default=-1, init=False)
     kills: int = dataclasses.field(default=0, init=False)
     launch_failures: int = dataclasses.field(default=0, init=False)
+    launches_seen: int = dataclasses.field(default=0, init=False)
 
     def __post_init__(self):
         if self.kill_site not in KILL_SITES:
@@ -111,8 +113,22 @@ class FaultPlan:
     # -- launch timeline ------------------------------------------------
     def launch(self, rung: str) -> None:
         """Called by the server before dispatching on ``rung``; raises
-        :class:`InjectedFailure` while the countdown lasts."""
-        if self.fail_launches > 0 and rung in self.fail_rungs:
+        :class:`InjectedFailure` while the countdown lasts.
+
+        With ``fail_from_launch=N`` the countdown is armed only once the
+        plan has witnessed N launch attempts on the named rungs — a
+        mid-run degradation: the server runs healthy, then its device
+        rung starts failing partway through a workload.
+        """
+        if rung not in self.fail_rungs:
+            return
+        self.launches_seen += 1
+        if (
+            self.fail_from_launch is not None
+            and self.launches_seen <= self.fail_from_launch
+        ):
+            return
+        if self.fail_launches > 0:
             self.fail_launches -= 1
             self.launch_failures += 1
             raise InjectedFailure(f"injected launch failure on rung {rung!r}")

@@ -16,9 +16,11 @@ from .api import (
     STRUCTURES,
     AccessStats,
     BuildArtifacts,
+    InvalidQueryError,
     KNNResult,
     RegionResult,
     SpatialIndex,
+    validate_queries,
 )
 from .join import JoinResult
 from .registry import (
@@ -34,6 +36,7 @@ __all__ = [
     "AccessStats",
     "BackendSpec",
     "BuildArtifacts",
+    "InvalidQueryError",
     "JoinResult",
     "KNNResult",
     "MergePolicy",
@@ -43,4 +46,5 @@ __all__ = [
     "backend_names",
     "get_backend",
     "register_backend",
+    "validate_queries",
 ]

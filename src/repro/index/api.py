@@ -61,6 +61,25 @@ _UPDATE_OPTS = ("capacity", "merge", "admission", "fault_plan")
 ADMISSION_MODES = ("merge", "shed")
 
 
+class InvalidQueryError(ValueError):
+    """A query rectangle/point rejected at the serving boundary —
+    NaN/±inf coordinates or an inverted rectangle (DESIGN.md §11).
+    Typed so the front end can refuse one bad arrival without poisoning
+    the coalesced batch it would have joined."""
+
+
+def validate_queries(queries, *, what: str = "queries") -> np.ndarray:
+    """Boundary hardening for QUERY rectangles: same finite/non-inverted
+    rules as :func:`validate_mbrs`, but raising the typed
+    :class:`InvalidQueryError` and returning the kernels' (Q, 4) float32
+    form.  Degenerate-but-valid points (lo == hi) pass."""
+    try:
+        arr = validate_mbrs(queries, what=what)
+    except ValueError as e:
+        raise InvalidQueryError(str(e)) from None
+    return np.ascontiguousarray(arr, np.float32)
+
+
 def validate_mbrs(mbrs, *, what: str = "mbrs") -> np.ndarray:
     """Input hardening shared by build and insert (DESIGN.md §9).
 
@@ -185,6 +204,9 @@ class AccessStats:
     shed_mutations: int = 0    # objects dropped by admission="shed"
     queued_mutations: int = 0  # objects parked by DurableIndex queueing
     rung_dispatches: dict = dataclasses.field(default_factory=dict)
+    # serving-front-end ledger (DESIGN.md §11)
+    shed_queries: int = 0      # requests dropped by SLO admission control
+    queued_queries: int = 0    # requests parked past max_queue (best-effort)
 
     def record(self, n_queries: int, accesses: int, launches: int) -> None:
         self.queries += int(n_queries)

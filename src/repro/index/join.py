@@ -158,7 +158,8 @@ def _quantize_cm(mbr_cm: np.ndarray, origin, inv_cell) -> np.ndarray:
     return np.ascontiguousarray(q.reshape(k, w, 4).transpose(0, 2, 1))
 
 
-def _dispatch(rung: str, args, *, block_w: int, interpret):
+def _dispatch(rung: str, args, *, block_w: int, interpret,
+              symmetric: bool = False):
     """Run one ladder rung over the prepared join arrays.
 
     Returns ``(pairs, visits, launches)`` as numpy."""
@@ -166,18 +167,19 @@ def _dispatch(rung: str, args, *, block_w: int, interpret):
         from repro.kernels import ops
 
         pairs, visits = ops.fused_join(
-            *args, block_a=block_w, block_b=block_w, interpret=interpret
+            *args, block_a=block_w, block_b=block_w, interpret=interpret,
+            symmetric=symmetric,
         )
         launches = 1
     elif rung == "lax":
         from repro.kernels import fallback
 
-        pairs, visits = fallback.fused_join_lax(*args)
+        pairs, visits = fallback.fused_join_lax(*args, symmetric=symmetric)
         launches = 0
     elif rung == "host":
         from repro.kernels import fallback
 
-        pairs, visits = fallback.fused_join_np(*args)
+        pairs, visits = fallback.fused_join_np(*args, symmetric=symmetric)
         launches = 0
     else:  # pragma: no cover
         raise ValueError(f"unknown join rung {rung!r}")
@@ -220,12 +222,18 @@ def join_impl(left, right, predicate: str = "intersects"):
     )
     block_w = int(left._backend_opts.get("block_w", 128))
     interpret = left._backend_opts.get("interpret")
+    # Self-join fast path: both sides are the SAME index object, so the
+    # pair mask is symmetric at every level — sweep only the upper
+    # triangle (half the tile-pair work), mirror in the epilogue.  Pairs
+    # stay bit-identical to the full sweep; only the visit ledger shrinks.
+    symmetric = right is left
 
     backend = left.spec.name
     if backend != "serve":
         rung = backend if backend in JOIN_LADDER else "host"
         pairs, visits, launches = _dispatch(
-            rung, args, block_w=block_w, interpret=interpret
+            rung, args, block_w=block_w, interpret=interpret,
+            symmetric=symmetric,
         )
         return JoinResult(pairs, visits, base_levels=k), launches
 
@@ -237,7 +245,8 @@ def join_impl(left, right, predicate: str = "intersects"):
             if plan is not None:
                 plan.launch(rung)
             pairs, visits, launches = _dispatch(
-                rung, args, block_w=block_w, interpret=interpret
+                rung, args, block_w=block_w, interpret=interpret,
+                symmetric=symmetric,
             )
         except Exception as e:  # noqa: BLE001 — any rung failure degrades
             left.stats.launch_failures += 1

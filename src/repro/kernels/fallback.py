@@ -284,17 +284,26 @@ def fused_search_compact_live_np(
 # ---------------------------------------------------------------------------
 
 
-def _pair_sweep_jnp(a_cm, a_parent, b_cm, b_parent):
+def _pair_sweep_jnp(a_cm, a_parent, b_cm, b_parent, symmetric=False):
     """(K, Wa, Wb) pair-active mask — jnp twin of ``join_scan.pair_sweep``.
 
     Same recurrence: a node pair survives level ``k`` iff its parent pair
     survived ``k-1`` and the two level-``k`` MBRs overlap (level 0 tests
     the root-pair overlap directly — conservative for every schedule
     flavour).  Tiles cast to float32 so uint16 joint-grid tiles take the
-    identical path."""
+    identical path.  ``symmetric`` is the self-join fast path: only slot
+    pairs with ``ga <= gb`` are kept per level (the same slot-granularity
+    triu the kernel applies — bit-compatible regardless of block size),
+    and the parent gather reads the mirrored previous level."""
     k_levels = a_cm.shape[0]
     a = jnp.asarray(a_cm).astype(jnp.float32)
     b = jnp.asarray(b_cm).astype(jnp.float32)
+    wa, wb = a.shape[2], b.shape[2]
+    triu = None
+    if symmetric:
+        triu = (
+            jnp.arange(wa)[:, None] <= jnp.arange(wb)[None, :]
+        )
     acts = []
     prev = None
     for k in range(k_levels):
@@ -308,19 +317,26 @@ def _pair_sweep_jnp(a_cm, a_parent, b_cm, b_parent):
         if k == 0:
             act = ov
         else:
+            gather = prev | prev.T if symmetric else prev
             act = ov & jnp.take(
-                jnp.take(prev, a_parent[k], axis=0), b_parent[k], axis=1
+                jnp.take(gather, a_parent[k], axis=0), b_parent[k], axis=1
             )
+        if symmetric:
+            act = act & triu
         acts.append(act)
         prev = act
     return jnp.stack(acts)
 
 
-def _pair_sweep_np(a_cm, a_parent, b_cm, b_parent):
+def _pair_sweep_np(a_cm, a_parent, b_cm, b_parent, symmetric=False):
     k_levels, _, wa = a_cm.shape
     wb = b_cm.shape[2]
     a = np.asarray(a_cm, np.float32)
     b = np.asarray(b_cm, np.float32)
+    triu = (
+        np.arange(wa)[:, None] <= np.arange(wb)[None, :]
+        if symmetric else None
+    )
     acts = np.zeros((k_levels, wa, wb), bool)
     for k in range(k_levels):
         al, bl = a[k], b[k]
@@ -333,7 +349,12 @@ def _pair_sweep_np(a_cm, a_parent, b_cm, b_parent):
         if k == 0:
             acts[k] = ov
         else:
-            acts[k] = ov & acts[k - 1][a_parent[k]][:, b_parent[k]]
+            prev = acts[k - 1]
+            if symmetric:
+                prev = prev | prev.T
+            acts[k] = ov & prev[a_parent[k]][:, b_parent[k]]
+        if symmetric:
+            acts[k] &= triu
     return acts
 
 
@@ -341,7 +362,7 @@ def fused_join_lax(
     a_cm, a_parent, a_anc, a_level, a_gid,
     b_cm, b_parent, b_anc, b_level, b_gid,
     table_a, table_b, alive_a, alive_b, delta_a, delta_b,
-    *, block_a=128, block_b=128, interpret=None,
+    *, block_a=128, block_b=128, interpret=None, symmetric=False,
 ):
     """lax rung of :func:`repro.kernels.ops.fused_join`: plain-XLA pair
     sweep + the shared candidate/confirm epilogue — pair sets AND pair-
@@ -349,7 +370,7 @@ def fused_join_lax(
     del block_a, block_b, interpret  # kernel-only tuning knobs
     from .join_scan import join_epilogue
 
-    act = _pair_sweep_jnp(a_cm, a_parent, b_cm, b_parent)
+    act = _pair_sweep_jnp(a_cm, a_parent, b_cm, b_parent, symmetric)
     return join_epilogue(
         act,
         jnp.asarray(a_anc), jnp.asarray(a_level), jnp.asarray(a_gid),
@@ -357,6 +378,7 @@ def fused_join_lax(
         jnp.asarray(table_a), jnp.asarray(table_b),
         jnp.asarray(alive_a), jnp.asarray(alive_b),
         jnp.asarray(delta_a), jnp.asarray(delta_b),
+        symmetric=symmetric,
     )
 
 
@@ -364,7 +386,7 @@ def fused_join_np(
     a_cm, a_parent, a_anc, a_level, a_gid,
     b_cm, b_parent, b_anc, b_level, b_gid,
     table_a, table_b, alive_a, alive_b, delta_a, delta_b,
-    *, block_a=128, block_b=128, interpret=None,
+    *, block_a=128, block_b=128, interpret=None, symmetric=False,
 ):
     """host rung: the same join in pure numpy (no device runtime)."""
     del block_a, block_b, interpret
@@ -372,7 +394,7 @@ def fused_join_np(
 
     act = _pair_sweep_np(
         np.asarray(a_cm), np.asarray(a_parent),
-        np.asarray(b_cm), np.asarray(b_parent),
+        np.asarray(b_cm), np.asarray(b_parent), symmetric,
     )
     return join_epilogue(
         act,
@@ -381,6 +403,7 @@ def fused_join_np(
         np.asarray(table_a, np.float32), np.asarray(table_b, np.float32),
         np.asarray(alive_a, bool), np.asarray(alive_b, bool),
         np.asarray(delta_a, bool), np.asarray(delta_b, bool),
+        symmetric=symmetric,
     )
 
 

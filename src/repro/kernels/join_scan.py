@@ -82,6 +82,7 @@ def _pair_sweep_kernel(
     width_a: int,
     width_b: int,
     onehot_gather: bool,
+    symmetric: bool,
 ):
     k = pl.program_id(0)
     ta = pl.program_id(1)
@@ -89,36 +90,77 @@ def _pair_sweep_kernel(
 
     @pl.when((k > 0) & (ta == 0) & (tb == 0))
     def _roll():  # level finished: its pair survivors become the parent mask
-        prev_ref[...] = cur_ref[...]
+        if symmetric:
+            # Only the upper triangle was swept, but a child pair's
+            # parent slots may land BELOW the diagonal — mirror the
+            # survivors so the gather sees the full symmetric mask.
+            c = cur_ref[...]
+            prev_ref[...] = jnp.maximum(c, c.T)
+        else:
+            prev_ref[...] = cur_ref[...]
 
-    ov = _pair_overlap_tile(a_ref[0], b_ref[0])  # (BA, BB)
+    def _tile_body():
+        ov = _pair_overlap_tile(a_ref[0], b_ref[0])  # (BA, BB)
 
-    pa_row = pa_ref[0].astype(jnp.int32)
-    pb_row = pb_ref[0].astype(jnp.int32)
-    if onehot_gather:
-        # TPU path: prev[pa, pb] as onehotA^T @ prev @ onehotB — two MXU
-        # matmuls instead of a two-axis lane gather.
-        ia = jax.lax.broadcasted_iota(jnp.int32, (width_a, block_a), 0)
-        oa = (ia == pa_row[None, :]).astype(jnp.float32)  # (Wa, BA)
-        ib = jax.lax.broadcasted_iota(jnp.int32, (width_b, block_b), 0)
-        ob = (ib == pb_row[None, :]).astype(jnp.float32)  # (Wb, BB)
-        pp = jnp.dot(
-            oa.T,
-            jnp.dot(prev_ref[...], ob, preferred_element_type=jnp.float32),
-            preferred_element_type=jnp.float32,
-        )
+        pa_row = pa_ref[0].astype(jnp.int32)
+        pb_row = pb_ref[0].astype(jnp.int32)
+        if onehot_gather:
+            # TPU path: prev[pa, pb] as onehotA^T @ prev @ onehotB — two
+            # MXU matmuls instead of a two-axis lane gather.
+            ia = jax.lax.broadcasted_iota(jnp.int32, (width_a, block_a), 0)
+            oa = (ia == pa_row[None, :]).astype(jnp.float32)  # (Wa, BA)
+            ib = jax.lax.broadcasted_iota(jnp.int32, (width_b, block_b), 0)
+            ob = (ib == pb_row[None, :]).astype(jnp.float32)  # (Wb, BB)
+            pp = jnp.dot(
+                oa.T,
+                jnp.dot(prev_ref[...], ob,
+                        preferred_element_type=jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            # Interpreter path: O(BA·Wb + BA·BB) two-stage take.
+            pp = jnp.take(
+                jnp.take(prev_ref[...], pa_row, axis=0), pb_row, axis=1
+            )
+        parent_active = pp > 0.5
+
+        act = jnp.where(k == 0, ov, parent_active & ov)
+        if symmetric:
+            # Self-join: the pair mask is symmetric at every level, so
+            # only slot pairs with ga <= gb are swept.  The mask is at
+            # SLOT granularity (not tile granularity) so the surviving
+            # set is independent of block size — the lax/np twins apply
+            # the identical triu and stay bit-compatible.
+            ga = ta * block_a + jax.lax.broadcasted_iota(
+                jnp.int32, (block_a, block_b), 0
+            )
+            gb = tb * block_b + jax.lax.broadcasted_iota(
+                jnp.int32, (block_a, block_b), 1
+            )
+            act = act & (ga <= gb)
+        cur_ref[
+            pl.ds(ta * block_a, block_a), pl.ds(tb * block_b, block_b)
+        ] = act.astype(jnp.float32)
+        act_ref[0] = act
+
+    if symmetric:
+        # Tiles strictly below the diagonal hold no ga <= gb slot pair:
+        # skip the overlap compute and parent gather entirely (this is
+        # the ~half-work saving), but still zero their act/cur region so
+        # the mirrored roll and the epilogue never read garbage.
+        @pl.when(tb < ta)
+        def _skip_lower():
+            z = jnp.zeros((block_a, block_b), jnp.float32)
+            cur_ref[
+                pl.ds(ta * block_a, block_a), pl.ds(tb * block_b, block_b)
+            ] = z
+            act_ref[0] = z.astype(jnp.bool_)
+
+        @pl.when(tb >= ta)
+        def _upper():
+            _tile_body()
     else:
-        # Interpreter path: O(BA·Wb + BA·BB) two-stage take.
-        pp = jnp.take(
-            jnp.take(prev_ref[...], pa_row, axis=0), pb_row, axis=1
-        )
-    parent_active = pp > 0.5
-
-    act = jnp.where(k == 0, ov, parent_active & ov)
-    cur_ref[pl.ds(ta * block_a, block_a), pl.ds(tb * block_b, block_b)] = (
-        act.astype(jnp.float32)
-    )
-    act_ref[0] = act
+        _tile_body()
 
 
 def _pad_side(mbr_cm, parent, block):
@@ -146,7 +188,9 @@ def _pad_side(mbr_cm, parent, block):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_a", "block_b", "interpret", "onehot_gather"),
+    static_argnames=(
+        "block_a", "block_b", "interpret", "onehot_gather", "symmetric"
+    ),
 )
 def pair_sweep(
     a_cm,      # (K, 4, Wa) level tiles of side A (f32 or uint16)
@@ -158,11 +202,24 @@ def pair_sweep(
     block_b: int = 128,
     interpret: bool = False,
     onehot_gather: bool | None = None,
+    symmetric: bool = False,
 ):
-    """Run the fused pair sweep; returns the (K, Wa, Wb) pair-active mask."""
+    """Run the fused pair sweep; returns the (K, Wa, Wb) pair-active mask.
+
+    ``symmetric=True`` is the self-join fast path: both sides MUST be the
+    same schedule, the sweep tests only slot pairs with ``ga <= gb``
+    (strict-lower tiles are skipped — half the tile-pair work), and the
+    returned mask holds only the upper triangle per level.  Mirror with
+    ``act | act.transpose(0, 2, 1)`` to recover the full mask (the
+    epilogue does this when told the join is symmetric).
+    """
     k_levels, _, wa = a_cm.shape
     kb, _, wb = b_cm.shape
     assert k_levels == kb, "both sides must be trimmed to the same K levels"
+    if symmetric:
+        assert wa == wb and block_a == block_b, (
+            "symmetric sweep requires identical widths and blocks"
+        )
     a_cm, a_parent, wa_p = _pad_side(a_cm, a_parent, block_a)
     b_cm, b_parent, wb_p = _pad_side(b_cm, b_parent, block_b)
     if onehot_gather is None:
@@ -174,6 +231,7 @@ def pair_sweep(
         width_a=wa_p,
         width_b=wb_p,
         onehot_gather=onehot_gather,
+        symmetric=symmetric,
     )
     act = pl.pallas_call(
         kernel,
@@ -203,6 +261,8 @@ def join_epilogue(
     table_a, table_b,          # (Na, 4) / (Nb, 4) f32 global-id MBR tables
     alive_a, alive_b,          # (Na,) / (Nb,) bool tombstone masks
     delta_a, delta_b,          # (Na,) / (Nb,) bool delta-buffer candidate rows
+    *,
+    symmetric: bool = False,   # act holds only the upper triangle per level
 ):
     """Candidate lookup + exact confirming pass, shared by every engine.
 
@@ -220,6 +280,11 @@ def join_epilogue(
     ea = a_level.shape[0]
     eb = b_level.shape[0]
     xp = np if isinstance(act, np.ndarray) else jnp
+    sweep_act = act  # unmirrored: the ledger counts pairs actually TESTED
+    if symmetric:
+        # Upper-triangle sweep: entry pairs gather at arbitrary (sa, sb)
+        # order, so mirror the mask for the candidate lookup.
+        act = act | act.transpose(0, 2, 1)
     k_ab = xp.minimum(a_level[:, None], b_level[None, :])        # (Ea, Eb)
     sa = a_anc[xp.arange(ea)[:, None], k_ab]
     sb = b_anc[xp.arange(eb)[None, :], k_ab]
@@ -238,7 +303,7 @@ def join_epilogue(
     # Pair-test ledger: per-level tile-pair survivors from the sweep, then
     # one column per side for the delta cross-scan's exact tests.
     visits = xp.concatenate([
-        act.sum(axis=(1, 2), dtype=xp.int32),
+        sweep_act.sum(axis=(1, 2), dtype=xp.int32),
         xp.stack([
             delta_a.sum(dtype=xp.int32) * alive_b.sum(dtype=xp.int32),
             delta_b.sum(dtype=xp.int32) * alive_a.sum(dtype=xp.int32),
@@ -248,7 +313,7 @@ def join_epilogue(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_a", "block_b", "interpret")
+    jax.jit, static_argnames=("block_a", "block_b", "interpret", "symmetric")
 )
 def _fused_join(
     a_cm, a_parent, a_anc, a_level, a_gid,
@@ -258,6 +323,7 @@ def _fused_join(
     block_a: int,
     block_b: int,
     interpret: bool,
+    symmetric: bool = False,
 ):
     """One jit program: pair sweep kernel + candidate/confirm epilogue.
 
@@ -270,10 +336,12 @@ def _fused_join(
     act = pair_sweep(
         a_cm, a_parent, b_cm, b_parent,
         block_a=block_a, block_b=block_b, interpret=interpret,
+        symmetric=symmetric,
     )
     return join_epilogue(
         act,
         a_anc, a_level, a_gid,
         b_anc, b_level, b_gid,
         table_a, table_b, alive_a, alive_b, delta_a, delta_b,
+        symmetric=symmetric,
     )

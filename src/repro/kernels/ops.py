@@ -145,6 +145,7 @@ def fused_join(
     block_a: int = 128,
     block_b: int = 128,
     interpret: bool | None = None,
+    symmetric: bool = False,
 ):
     """Tree-vs-tree spatial join: one fused pair-sweep launch + exact
     confirming epilogue (DESIGN.md §10).
@@ -158,6 +159,10 @@ def fused_join(
     the pair set is bit-identical to the brute-force nested-loop oracle
     on every precision; only ``visits`` (tile-pair tests per level, plus
     one delta cross-scan column per side) depends on tile precision.
+
+    ``symmetric=True`` (self-join: both sides the same schedule + live
+    state) sweeps only the upper pair triangle — half the tile-pair
+    work — and mirrors in the epilogue; the pair set is unchanged.
     """
     if interpret is None:
         interpret = interpret_default()
@@ -168,11 +173,13 @@ def fused_join(
         block_a=block_a,
         block_b=block_b,
         interpret=interpret,
+        symmetric=symmetric,
     )
 
 
 def pair_sweep(a_cm, a_parent, b_cm, b_parent, *, block_a: int = 128,
-               block_b: int = 128, interpret: bool | None = None):
+               block_b: int = 128, interpret: bool | None = None,
+               symmetric: bool = False):
     """Raw (K, Wa, Wb) pair-active mask of the synchronized level sweep —
     the join kernel without its epilogue, for tests and benches."""
     if interpret is None:
@@ -180,6 +187,7 @@ def pair_sweep(a_cm, a_parent, b_cm, b_parent, *, block_a: int = 128,
     return _pair_sweep(
         a_cm, a_parent, b_cm, b_parent,
         block_a=block_a, block_b=block_b, interpret=interpret,
+        symmetric=symmetric,
     )
 
 

@@ -3,6 +3,11 @@ path uses the mqr-KV sparse attention (the paper's technique).
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama32_1b \
       --batch 4 --prompt-len 32 --gen 32
+
+NOT the spatial serving front end: this module serves transformer
+tokens.  Spatial query serving is :mod:`repro.serve` (front end:
+batching / admission / tenants) over :mod:`repro.launch.spatial_serve`
+(the per-index engine).
 """
 
 from __future__ import annotations

@@ -13,6 +13,17 @@ LevelSchedule` on device and answers streams of query rectangles with
   vmapped path transparently).
 
   PYTHONPATH=src python -m repro.launch.spatial_serve --n 2000 --queries 256
+
+Where this sits in the serving stack (one entry point per layer):
+
+* THIS module is the low-level single-index serving ENGINE — cache,
+  dedupe, padding, ladder.  It is what ``backend="serve"`` builds under
+  a :class:`repro.index.SpatialIndex`.
+* :mod:`repro.serve` is the user-facing serving FRONT END — continuous
+  batching of single arrivals, SLO admission control, the multi-tenant
+  registry.  New serving features land there, on top of this engine.
+* :mod:`repro.launch.serve` is the UNRELATED transformer decode driver
+  (same repo, different paper track); it serves tokens, not rectangles.
 """
 
 from __future__ import annotations
@@ -280,8 +291,16 @@ class SpatialServer:
         Returns ``(hits, visits)`` exactly as :func:`repro.kernels.ops.
         pyramid_scan` would per query — the cache and batching are
         result-transparent.
+
+        The boundary is hardened: NaN/±inf/inverted rectangles raise the
+        typed :class:`repro.index.InvalidQueryError` BEFORE any of them
+        can be cached or poison a padded batch's neighbours.
         """
-        queries = np.ascontiguousarray(np.asarray(queries, np.float32))
+        # lazy import: repro.index imports this module's backend wrapper,
+        # so the validation helper is pulled at call time, not import time
+        from repro.index.api import validate_queries
+
+        queries = validate_queries(queries, what="served queries")
         nq = queries.shape[0]
         if nq == 0:
             return (

@@ -305,6 +305,69 @@ def test_join_stats_ledger():
 
 
 # ---------------------------------------------------------------------------
+# Self-join fast path: symmetric upper-triangle sweep (half the work)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_self_join_symmetric_sweep_bit_parity(backend):
+    """``idx.join(idx)`` takes the symmetric fast path: pair set
+    bit-identical to the full sweep over an equal twin index, with
+    strictly fewer sweep pair-tests (only the upper triangle runs)."""
+    da = _data("a", "exponential_squares", 150)
+    idx = SpatialIndex.build(da, structure="mqr", backend=backend)
+    twin = SpatialIndex.build(da, structure="mqr", backend=backend)
+    fast = idx.join(idx)        # right IS left -> symmetric sweep
+    full = idx.join(twin)       # equal data, different object -> full sweep
+    assert np.array_equal(fast.pairs, full.pairs)
+    assert np.array_equal(fast.pairs, oracle_pairs(idx, idx))
+    assert fast.sweep_visits.sum() < full.sweep_visits.sum()
+    # the delta cross-scan columns are untouched by the fast path
+    assert np.array_equal(fast.pair_visits[-2:], full.pair_visits[-2:])
+
+
+def test_self_join_symmetric_visits_block_size_invariant():
+    """The kernel's triu mask is SLOT-granular, so the surviving set —
+    and therefore the visit ledger — cannot depend on tile block size,
+    and matches the lax/host twins bit-for-bit."""
+    da = _data("a", "uniform_squares", 150)
+    ref = SpatialIndex.build(da, structure="mqr", backend="host")
+    want = ref.join(ref)
+    for backend, opts in (("lax", {}), ("pallas", {}),
+                          ("pallas", {"block_w": 32}),
+                          ("pallas", {"block_w": 64})):
+        idx = SpatialIndex.build(da, structure="mqr", backend=backend,
+                                 **opts)
+        res = idx.join(idx)
+        assert np.array_equal(res.pairs, want.pairs), (backend, opts)
+        assert np.array_equal(res.pair_visits, want.pair_visits), (
+            backend, opts
+        )
+
+
+def test_self_join_symmetric_compact_and_live():
+    """Fast path holds on the compact uint16 grid and across live state
+    (delta buffer + tombstones): pairs equal to a full-sweep twin that
+    replayed the identical mutations."""
+    da = _data("a", "uniform_squares", 140)
+    extra = _data("b", "uniform_squares", 12)
+
+    def build():
+        idx = SpatialIndex.build(da, structure="mqr", backend="pallas",
+                                 precision="compact", capacity=32)
+        idx.insert(extra)
+        idx.delete(np.arange(6))
+        return idx
+
+    idx, twin = build(), build()
+    fast = idx.join(idx)
+    full = idx.join(twin)
+    assert np.array_equal(fast.pairs, full.pairs)
+    assert np.array_equal(fast.pairs, oracle_pairs(idx, idx))
+    assert fast.sweep_visits.sum() < full.sweep_visits.sum()
+
+
+# ---------------------------------------------------------------------------
 # Property: arbitrary finite geometry on both sides
 # ---------------------------------------------------------------------------
 # Unlike the module-level ``importorskip`` idiom elsewhere, the guard is a
