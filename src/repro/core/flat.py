@@ -193,6 +193,14 @@ NEVER_MBR = np.array([np.inf, np.inf, -np.inf, -np.inf], np.float32)
 CELLS = 65534
 Q_NEVER_MBR = np.array([CELLS + 1, CELLS + 1, 0, 0], np.uint16)
 
+# Coarse uint8 grid for the UPPER levels of a hierarchical quantization
+# (DESIGN.md §12): same outward rounding on a 255-cell grid, same sentinel
+# scheme (lo=CELLS8+1=255 never overlaps a clipped query).  Conservativity
+# holds at any resolution, so upper levels can afford 1-byte coordinates —
+# the exact confirming pass still makes hit sets bit-identical.
+CELLS8 = 254
+Q8_NEVER_MBR = np.array([CELLS8 + 1, CELLS8 + 1, 0, 0], np.uint8)
+
 
 @dataclasses.dataclass(frozen=True)
 class LevelSchedule:
@@ -271,6 +279,21 @@ class QuantizedSchedule:
     inv_cell:    (4,) float32 cells-per-unit, coordinate-major.
     confirm_mbr: (E, 4) float32 exact MBR the confirming pass tests.
     cells:       highest real grid cell index (sentinel is cells+1).
+
+    Hierarchical (uint8 upper-level) extension — DESIGN.md §12.  When
+    ``mbr_q8`` is present, levels ``[0, split)`` additionally carry a
+    coarse uint8 form on a 254-cell grid sharing ``origin``; the hier
+    sweep tests those levels on the coarse grid (1 byte/coordinate) and
+    the remaining ``[split, L)`` levels on the fine uint16 grid.  Both
+    grids round outward, so every level's candidate mask stays a superset
+    of the exact sweep's and the confirming pass keeps hit sets
+    bit-identical; only the access counts (``visits``) may inflate.
+
+    mbr_q8:    (split, 4, W) uint8 coarse tiles of the upper levels, or
+               ``None`` for a flat (uint16-only) quantization.
+    split:     first level swept on the fine grid (0 = no coarse levels).
+    cells8:    highest real coarse cell index (sentinel is cells8+1).
+    inv_cell8: (4,) float32 coarse cells-per-unit (shares ``origin``).
     """
 
     base: LevelSchedule
@@ -280,6 +303,10 @@ class QuantizedSchedule:
     inv_cell: np.ndarray
     confirm_mbr: np.ndarray
     cells: int = CELLS
+    mbr_q8: np.ndarray | None = None
+    split: int = 0
+    cells8: int = CELLS8
+    inv_cell8: np.ndarray | None = None
 
     @property
     def levels(self) -> int:
@@ -294,9 +321,21 @@ class QuantizedSchedule:
         return self.base.n_objects
 
     @property
+    def hierarchical(self) -> bool:
+        """Whether the uint8 upper-level tiles are materialized."""
+        return self.mbr_q8 is not None and self.split > 0
+
+    @property
     def streamed_bytes(self) -> int:
         """HBM bytes the fused sweep streams per launch (node tiles +
-        parent rows); the float32 path streams ``base`` at 2x."""
+        parent rows); the float32 path streams ``base`` at 2x.  The
+        hierarchical form streams uint8 tiles for the upper levels."""
+        if self.hierarchical:
+            return (
+                self.mbr_q8.nbytes
+                + self.mbr_q[self.split:].nbytes
+                + self.parent_q.nbytes
+            )
         return self.mbr_q.nbytes + self.parent_q.nbytes
 
 

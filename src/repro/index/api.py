@@ -53,7 +53,7 @@ from .registry import BackendSpec, get_backend
 STRUCTURES = ("mqr", "rtree", "pyramid")
 
 # Build-time options; everything else in **opts goes to the backend factory.
-_BUILD_OPTS = ("levels", "max_entries", "build")
+_BUILD_OPTS = ("levels", "max_entries", "build", "order")
 # Live-update / durability options (structure-agnostic, façade-consumed).
 _UPDATE_OPTS = ("capacity", "merge", "admission", "fault_plan")
 
@@ -264,18 +264,27 @@ class BuildArtifacts:
     """
 
     def __init__(self, structure: str, mbrs: np.ndarray, *, levels=None,
-                 max_entries=None, build=None):
+                 max_entries=None, build=None, order=None):
         self.structure = structure
         self.mbrs = validate_mbrs(mbrs)
         self.n_objects = self.mbrs.shape[0]
+        if order not in (None, "none", "hilbert"):
+            raise ValueError(
+                f"unknown order {order!r}; expected 'hilbert' (or None)"
+            )
         # original user options, so extend() can re-run the same build
         self.build_opts = dict(levels=levels, max_entries=max_entries,
-                               build=build)
+                               build=build, order=order)
         self.pointer_tree = None
         self.pyramid = None
         self._flat: Optional[FlatTree] = None
         self._schedule: Optional[LevelSchedule] = None
+        self._ordered = False  # Hilbert permutation applied to _schedule?
         self._quantized = None
+        self._quantized8 = None
+        # Autotuned TileConfig winners keyed by kernels.autotune.shape_key,
+        # shared by every backend over these artifacts (DESIGN.md §12).
+        self.tuned: dict = {}
         if structure == "mqr":
             _reject_opts(structure, levels=levels, max_entries=max_entries,
                          build=build)
@@ -328,13 +337,19 @@ class BuildArtifacts:
         self.structure = structure
         self.mbrs = np.asarray(mbrs, np.float64).reshape(-1, 4)
         self.n_objects = self.mbrs.shape[0]
-        self.build_opts = dict(levels=None, max_entries=None, build=None)
+        self.build_opts = dict(levels=None, max_entries=None, build=None,
+                               order=None)
         self.build_opts.update(build_opts or {})
         self.pointer_tree = None
         self.pyramid = None
         self._flat = None
         self._schedule = schedule
+        # The saved schedule was captured AFTER any build-time slot
+        # ordering, so restore never re-permutes.
+        self._ordered = True
         self._quantized = quantized
+        self._quantized8 = None
+        self.tuned = {}
         if structure == "mqr":
             self.pointer_tree = mqrtree.build(self.mbrs)
         elif structure == "rtree":
@@ -362,6 +377,16 @@ class BuildArtifacts:
                 self._schedule = pyramid_schedule(self.pyramid, self.mbrs)
             else:
                 self._schedule = level_schedule(self.flat)
+        if not self._ordered:
+            self._ordered = True
+            if self.build_opts.get("order") == "hilbert":
+                # Build-time locality pass (DESIGN.md §12): permute every
+                # level's real slots into Hilbert order of their MBR
+                # centers.  Hits, visits and ids are bit-identical; only
+                # which slots share a tile changes.
+                from repro.kernels import ops
+
+                self._schedule = ops.hilbert_permute(self._schedule)
         return self._schedule
 
     @property
@@ -374,6 +399,19 @@ class BuildArtifacts:
 
             self._quantized = ops.quantize_schedule(self.schedule)
         return self._quantized
+
+    @property
+    def quantized8(self):
+        """Hierarchical uint8-upper/uint16-lower tile form of
+        :attr:`schedule` (DESIGN.md §12) for ``precision="compact8"``
+        backends, quantized once and shared like :attr:`quantized`."""
+        if self._quantized8 is None:
+            from repro.kernels import ops
+
+            self._quantized8 = ops.quantize_schedule(
+                self.schedule, upper8=True
+            )
+        return self._quantized8
 
 
 # ---------------------------------------------------------------------------
@@ -418,7 +456,7 @@ class SpatialIndex:
     # -- construction --------------------------------------------------
     @classmethod
     def build(cls, mbrs, *, structure: str = "mqr", backend: str = "pallas",
-              **opts) -> "SpatialIndex":
+              backend_opts: Optional[dict] = None, **opts) -> "SpatialIndex":
         """Build a spatial index over ``mbrs`` (n, 4).
 
         structure: ``mqr`` (paper pointer tree) | ``rtree`` (Guttman
@@ -448,10 +486,31 @@ class SpatialIndex:
             count it in ``stats.shed_mutations``); ``fault_plan`` — a
             ``repro.ft.FaultPlan`` threaded through the update engine
             and serving ladder for fault-injection tests.
+        backend_opts: an explicit dict of backend-only options (e.g.
+            tile/stream overrides ``{"block_w": 256, "stream": True,
+            "autotune": "off"}``), merged with the backend options routed
+            out of ``opts``.  Keys are strict: a key also given in
+            ``opts`` raises ``TypeError`` (no silent precedence), and an
+            option the backend factory does not accept raises
+            ``TypeError`` from its signature.
         """
+        explicit = dict(backend_opts or {})
         update_opts = {k: opts.pop(k) for k in list(opts) if k in _UPDATE_OPTS}
         build_opts = {k: v for k, v in opts.items() if k in _BUILD_OPTS}
         backend_opts = {k: v for k, v in opts.items() if k not in _BUILD_OPTS}
+        for k, v in explicit.items():
+            if k in backend_opts or k in build_opts or k in update_opts:
+                raise TypeError(
+                    f"backend_opts duplicates option {k!r} also passed "
+                    f"directly"
+                )
+            if k in _BUILD_OPTS or k in _UPDATE_OPTS:
+                raise TypeError(
+                    f"backend_opts key {k!r} is a "
+                    f"{'build' if k in _BUILD_OPTS else 'update'} option; "
+                    f"pass it directly"
+                )
+            backend_opts[k] = v
         artifacts = BuildArtifacts(structure, mbrs, **build_opts)
         idx = cls(artifacts, get_backend(backend), **backend_opts)
         if "capacity" in update_opts or "merge" in update_opts:

@@ -195,9 +195,10 @@ def _make_lax_sweep(schedule: LevelSchedule):
 
 
 def _check_precision(precision: str) -> None:
-    if precision not in ("float32", "compact"):
+    if precision not in ("float32", "compact", "compact8"):
         raise ValueError(
-            f"unknown precision {precision!r}; expected 'float32' or 'compact'"
+            f"unknown precision {precision!r}; expected 'float32', "
+            f"'compact' or 'compact8'"
         )
 
 
@@ -206,31 +207,139 @@ def _check_precision(precision: str) -> None:
     structures=ALL_STRUCTURES,
     artifact="schedule",
     doc="fused single-launch Pallas sweep (kernels.ops.pyramid_scan); "
-        "precision='compact' streams conservative uint16 tiles",
+        "precision='compact' streams conservative uint16 tiles, "
+        "'compact8' adds coarse uint8 upper-level tiles; stream=True "
+        "double-buffers MBR tiles from HBM; block_w=None autotunes",
 )
 class PallasBackend:
-    def __init__(self, artifacts, *, block_w: int = 128, interpret=None,
-                 precision: str = "float32"):
+    """Fused-kernel adapter with autotuned tiling (DESIGN.md §12).
+
+    ``block_w=None`` (the default) leaves the tile width to the
+    autotuner: ``autotune="auto"`` times the candidate grid of
+    :mod:`repro.kernels.autotune` on the first query batch once the slot
+    grid is wide enough to matter, ``"on"`` always does, ``"off"`` (or
+    any explicit ``block_w``/``query_block``) pins the fixed
+    configuration.  Winners are cached in ``BuildArtifacts.tuned`` keyed
+    by shape, so ``with_backend`` twins reuse the measurement.
+    """
+
+    def __init__(self, artifacts, *, block_w: int | None = None,
+                 interpret=None, precision: str = "float32",
+                 stream: bool = False, autotune: str = "auto",
+                 query_block: int | None = None):
         _check_precision(precision)
+        if autotune not in ("auto", "on", "off"):
+            raise ValueError(
+                f"unknown autotune {autotune!r}; expected 'auto', 'on' or "
+                f"'off'"
+            )
+        if stream and precision == "compact8":
+            raise ValueError(
+                "stream=True is not supported with precision='compact8' "
+                "(the hierarchical sweep is VMEM-resident; DESIGN.md §12)"
+            )
         self.precision = precision
         self.schedule = artifacts.schedule
         # Quantized once per BuildArtifacts, shared across backends.
-        self.qschedule = artifacts.quantized if precision == "compact" else None
+        if precision == "compact":
+            self.qschedule = artifacts.quantized
+        elif precision == "compact8":
+            self.qschedule = artifacts.quantized8
+        else:
+            self.qschedule = None
         self.block_w = block_w
+        self.query_block = query_block
+        self.stream = stream
+        self.autotune = autotune
         self.interpret = interpret
+        # Shape -> TileConfig winners, shared across backends over the
+        # same artifacts (restore()'d artifacts start empty).
+        self._tuned = getattr(artifacts, "tuned", None)
+        if self._tuned is None:
+            self._tuned = {}
 
-    def region(self, queries: np.ndarray):
+    def _config(self, queries: np.ndarray):
+        from repro.kernels.autotune import (
+            AUTO_MIN_WIDTH,
+            PROBE_QUERIES,
+            TileConfig,
+            candidates,
+            shape_key,
+            tune,
+        )
+
+        fixed = TileConfig(
+            128 if self.block_w is None else self.block_w,
+            self.query_block, True,
+        )
+        if (
+            self.autotune == "off"
+            or self.block_w is not None
+            or self.query_block is not None
+        ):
+            return fixed
+        width = self.schedule.width
+        if self.autotune == "auto" and width < AUTO_MIN_WIDTH:
+            return fixed
+        nq = queries.shape[0]
+        key = shape_key(
+            width, self.schedule.levels, nq, self.precision, self.stream
+        )
+        cfg = self._tuned.get(key)
+        if cfg is None:
+            probe = queries[:PROBE_QUERIES]
+            cands = candidates(
+                width, nq, precision=self.precision, stream=self.stream
+            )
+            cfg, _ = tune(
+                lambda c: lambda: np.asarray(self._run(probe, c)[0]), cands
+            )
+            self._tuned[key] = cfg
+        return cfg
+
+    def _run_one(self, queries: np.ndarray, cfg):
+        if not cfg.levels_in_grid:
+            # Per-level launch plan — float32 non-streamed only (the
+            # candidate grid never proposes it elsewhere); hits and
+            # visits are bit-identical to the fused sweep.
+            hits, visits, n_launches = ops.per_level_region_search(
+                self.schedule, queries, block_w=cfg.block_w
+            )
+            return hits, visits, n_launches
         if self.precision == "compact":
             hits, visits = ops.pyramid_scan_compact(
-                self.qschedule, queries, block_w=self.block_w,
+                self.qschedule, queries, block_w=cfg.block_w,
+                interpret=self.interpret, stream=self.stream,
+            )
+        elif self.precision == "compact8":
+            hits, visits = ops.pyramid_scan_compact8(
+                self.qschedule, queries, block_w=cfg.block_w,
                 interpret=self.interpret,
             )
         else:
             hits, visits = ops.pyramid_scan(
-                self.schedule, queries, block_w=self.block_w,
-                interpret=self.interpret,
+                self.schedule, queries, block_w=cfg.block_w,
+                interpret=self.interpret, stream=self.stream,
             )
-        return np.asarray(hits), np.asarray(visits), 1
+        return hits, visits, 1
+
+    def _run(self, queries: np.ndarray, cfg):
+        qb = cfg.query_block
+        if qb and queries.shape[0] > qb:
+            hs, vs, launches = [], [], 0
+            for i in range(0, queries.shape[0], qb):
+                h, v, n = self._run_one(queries[i:i + qb], cfg)
+                hs.append(np.asarray(h))
+                vs.append(np.asarray(v))
+                launches += n
+            return np.concatenate(hs), np.concatenate(vs), launches
+        return self._run_one(queries, cfg)
+
+    def region(self, queries: np.ndarray):
+        queries = np.asarray(queries, np.float32)
+        cfg = self._config(queries)
+        hits, visits, launches = self._run(queries, cfg)
+        return np.asarray(hits), np.asarray(visits), launches
 
 
 # ---------------------------------------------------------------------------
@@ -256,6 +365,12 @@ class ServeBackend:
         # package's kernel API, keep the layers acyclic at import time.
         from repro.launch.spatial_serve import LADDER, SpatialServer
 
+        if precision == "compact":
+            quantized = artifacts.quantized
+        elif precision == "compact8":
+            quantized = artifacts.quantized8
+        else:
+            quantized = None
         self.server = SpatialServer(
             artifacts.schedule,
             query_block=query_block,
@@ -263,7 +378,7 @@ class ServeBackend:
             block_w=block_w,
             interpret=interpret,
             precision=precision,
-            quantized=(artifacts.quantized if precision == "compact" else None),
+            quantized=quantized,
             ladder=LADDER if ladder is None else ladder,
             max_retries=max_retries,
             backoff=backoff,

@@ -34,6 +34,7 @@ access counts are unchanged — only where the build runs moves.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import numpy as np
@@ -265,6 +266,7 @@ def device_schedule(
     engine: str = "auto",
     block_n: int = 128,
     interpret: bool | None = None,
+    order: str | None = None,
 ) -> LevelSchedule:
     """Device-resident bulk build straight to a :class:`LevelSchedule`.
 
@@ -274,6 +276,12 @@ def device_schedule(
     both emit bit-identical schedules.  The returned schedule is the same
     object the host ``flat.pyramid_schedule`` path produces, so every
     backend (host/lax/pallas/serve) serves it unchanged.
+
+    ``order="hilbert"`` additionally renumbers every level's slots along
+    the Hilbert curve of the slot-MBR centers (:func:`hilbert_permute`) —
+    hit sets, ids, and per-level access counts are invariant under the
+    within-level bijection; only which *tiles* the visited slots cluster
+    into changes (DESIGN.md §12).
     """
     from . import ops  # runtime import: ops imports this module at load
 
@@ -299,7 +307,7 @@ def device_schedule(
     else:
         raise ValueError(f"unknown build engine {engine!r}")
     group_of = np.asarray(group_of)
-    return LevelSchedule(
+    schedule = LevelSchedule(
         mbr_cm=np.ascontiguousarray(np.asarray(mbr_cm)),
         parent=np.asarray(parent),
         n_real=np.asarray(n_real, np.int32),
@@ -310,4 +318,89 @@ def device_schedule(
         n_objects=n,
         root_unconditional=False,
         test_object_mbr=False,
+    )
+    if order not in (None, "none", "hilbert"):
+        raise ValueError(f"unknown slot order {order!r}")
+    if order == "hilbert":
+        schedule = hilbert_permute(schedule)
+    return schedule
+
+
+# ---------------------------------------------------------------------------
+# Build-time Hilbert slot ordering (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def hilbert_keys(x, y, order: int = 16) -> np.ndarray:
+    """Vectorized Hilbert-curve index of points normalized to [0, 1].
+
+    Standard bitwise xy→d walk over ``order`` bits (rotate/reflect per
+    quadrant), evaluated with numpy array ops so a whole level keys in one
+    pass.  Ties (identical centers) are broken by the stable argsort of
+    the caller, keeping the permutation deterministic."""
+    n = 1 << order
+    x = np.clip((np.asarray(x, np.float64) * n).astype(np.int64), 0, n - 1)
+    y = np.clip((np.asarray(y, np.float64) * n).astype(np.int64), 0, n - 1)
+    d = np.zeros_like(x)
+    s = n >> 1
+    while s > 0:
+        rx = ((x & s) > 0).astype(np.int64)
+        ry = ((y & s) > 0).astype(np.int64)
+        d += s * s * ((3 * rx) ^ ry)
+        # rotate the quadrant: reflect when rx==1, then swap axes (ry==0)
+        swap = ry == 0
+        refl = swap & (rx == 1)
+        xr = np.where(refl, s - 1 - x, x)
+        yr = np.where(refl, s - 1 - y, y)
+        x = np.where(swap, yr, xr)
+        y = np.where(swap, xr, yr)
+        s >>= 1
+    return d
+
+
+def hilbert_permute(schedule: LevelSchedule, order: int = 16) -> LevelSchedule:
+    """Renumber every level's real slots along the Hilbert curve of their
+    MBR centers (a within-level bijection; padded slots stay in place).
+
+    Parent references are remapped through the previous level's
+    permutation and object entry slots through their own level's, so the
+    sweep recurrence computes the *same* per-level active sets under new
+    slot numbers: hit sets, ``AccessStats`` ids, and per-level visit
+    counts are all bit-identical (tests/test_hilbert.py).  What changes
+    is tile locality — a small query's survivors cluster into few
+    ``block_w`` tiles instead of scattering across the level, which is
+    what the visited-tile bytes/query metric of DESIGN.md §12 measures.
+    """
+    obj = np.asarray(schedule.obj_mbr, np.float64)
+    lo = obj[:, :2].min(axis=0)
+    span = np.maximum(obj[:, 2:].max(axis=0) - lo, 1e-30)
+    mbr = np.array(schedule.mbr_cm, copy=True)
+    parent = np.array(schedule.parent, copy=True)
+    obj_slot = np.array(schedule.obj_slot, copy=True)
+    obj_level = np.asarray(schedule.obj_level)
+    levels = schedule.levels
+    prev_perm = None  # old slot -> new slot, previous level
+    for l in range(levels):
+        nr = int(schedule.n_real[l])
+        cx = (schedule.mbr_cm[l, 0, :nr] + schedule.mbr_cm[l, 2, :nr]) / 2.0
+        cy = (schedule.mbr_cm[l, 1, :nr] + schedule.mbr_cm[l, 3, :nr]) / 2.0
+        keys = hilbert_keys((cx - lo[0]) / span[0], (cy - lo[1]) / span[1],
+                            order=order)
+        by_key = np.argsort(keys, kind="stable")  # new slot -> old slot
+        perm = np.empty(nr, np.int64)
+        perm[by_key] = np.arange(nr)              # old slot -> new slot
+        mbr[l, :, :nr] = schedule.mbr_cm[l][:, by_key]
+        if l > 0:
+            old_parent = np.asarray(schedule.parent[l, :nr], np.int64)
+            parent[l, :nr] = prev_perm[old_parent[by_key]].astype(
+                schedule.parent.dtype
+            )
+        mask = obj_level == l
+        if mask.any():
+            obj_slot[mask] = perm[
+                np.asarray(schedule.obj_slot)[mask].astype(np.int64)
+            ].astype(obj_slot.dtype)
+        prev_perm = perm
+    return dataclasses.replace(
+        schedule, mbr_cm=mbr, parent=parent, obj_slot=obj_slot
     )

@@ -17,6 +17,13 @@ unconditional delta levels from ``uncond_from``, per-object confirming
 pass, tombstone mask — so degraded answers are *bit-identical* to the
 healthy path's hit sets and per-level visit counts (tests/
 test_degradation.py); only latency degrades.
+
+``stream=True`` on any region twin mirrors the HBM-streaming kernel's
+access pattern (DESIGN.md §12): only the previous level's survivor mask
+stays live and object-entry activity is gathered incrementally per level,
+so peak memory is O(Q·W) instead of O(L·Q·W) — the twin that lets the
+1e7-object benchmark row run off-kernel with the same bit-identical
+answers.
 """
 
 from __future__ import annotations
@@ -47,8 +54,27 @@ def _quantize_queries(xp, queries, origin, inv_cell, cells):
 
 
 # ---------------------------------------------------------------------------
-# lax rung: jnp level sweep, jit/vmap-able, no pallas_call
+# Shared sweep cores, parameterized by array namespace (np or jnp)
 # ---------------------------------------------------------------------------
+
+
+def _level_act(xp, ov, prev, parent_l, *, l, nq, w, root_unconditional,
+               uncond_from):
+    """One level of the sweep recurrence — identical on every rung."""
+    if l == 0:
+        if root_unconditional and uncond_from > 0:
+            if xp is np:
+                act = np.zeros((nq, w), bool)
+                act[:, 0] = True
+            else:
+                act = jnp.zeros((nq, w), bool).at[:, 0].set(True)
+        else:
+            act = ov
+    elif l >= uncond_from:
+        act = ov  # flat delta level: no parent gate
+    else:
+        act = ov & xp.take(prev, parent_l, axis=1)
+    return act
 
 
 def _sweep_jnp(queries, mbr_cm, parent, *, root_unconditional, uncond_from):
@@ -61,101 +87,13 @@ def _sweep_jnp(queries, mbr_cm, parent, *, root_unconditional, uncond_from):
     prev = None
     for l in range(levels):
         ov = _overlap(mbr_rm[l][None, :, :], queries[:, None, :])  # (Q, W)
-        if l == 0:
-            if root_unconditional and uncond_from > 0:
-                act = jnp.zeros((nq, w), bool).at[:, 0].set(True)
-            else:
-                act = ov
-        elif l >= uncond_from:
-            act = ov  # flat delta level: no parent gate
-        else:
-            act = ov & jnp.take(prev, parent[l], axis=1)
+        act = _level_act(
+            jnp, ov, prev, parent[l], l=l, nq=nq, w=w,
+            root_unconditional=root_unconditional, uncond_from=uncond_from,
+        )
         acts.append(act)
         prev = act
     return jnp.stack(acts)  # (L, Q, W)
-
-
-def fused_search_lax(
-    queries, mbr_cm, parent, obj_mbr, obj_level, obj_slot, obj_id,
-    *, n_objects, block_w=128, root_unconditional=True,
-    test_object_mbr=True, interpret=None,
-):
-    del block_w, interpret  # kernel-only tuning knobs
-    act = _sweep_jnp(
-        queries, mbr_cm, parent,
-        root_unconditional=root_unconditional, uncond_from=None,
-    )
-    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))
-    hit = jnp.transpose(act[obj_level, :, obj_slot])
-    if test_object_mbr:
-        hit = hit & _overlap(obj_mbr[None, :, :], queries[:, None, :])
-    hits = jnp.zeros((queries.shape[0], max(n_objects, 1)), jnp.bool_)
-    hits = hits.at[:, obj_id].max(hit)
-    return hits, visits
-
-
-def fused_search_live_lax(
-    queries, mbr_cm, parent, obj_mbr, obj_level, obj_slot, obj_id, alive,
-    *, n_objects, base_levels, block_w=128, root_unconditional=True,
-    test_object_mbr=True, interpret=None,
-):
-    del block_w, interpret
-    act = _sweep_jnp(
-        queries, mbr_cm, parent,
-        root_unconditional=root_unconditional, uncond_from=base_levels,
-    )
-    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))
-    hit = jnp.transpose(act[obj_level, :, obj_slot])
-    if test_object_mbr:
-        hit = hit & _overlap(obj_mbr[None, :, :], queries[:, None, :])
-    hits = jnp.zeros((queries.shape[0], max(n_objects, 1)), jnp.bool_)
-    hits = hits.at[:, obj_id].max(hit)
-    return hits & alive[None, :], visits
-
-
-def fused_search_compact_lax(
-    queries, mbr_q, parent_q, confirm_mbr, obj_level, obj_slot, obj_id,
-    origin, inv_cell,
-    *, n_objects, cells, block_w=128, root_unconditional=True,
-    interpret=None,
-):
-    del block_w, interpret
-    qq = _quantize_queries(jnp, queries, origin, inv_cell, cells)
-    act = _sweep_jnp(
-        qq, mbr_q.astype(jnp.int32), parent_q.astype(jnp.int32),
-        root_unconditional=root_unconditional, uncond_from=None,
-    )
-    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))
-    cand = jnp.transpose(act[obj_level, :, obj_slot])
-    hit = cand & _overlap(confirm_mbr[None, :, :], queries[:, None, :])
-    hits = jnp.zeros((queries.shape[0], max(n_objects, 1)), jnp.bool_)
-    hits = hits.at[:, obj_id].max(hit)
-    return hits, visits
-
-
-def fused_search_compact_live_lax(
-    queries, mbr_q, parent_q, confirm_mbr, obj_level, obj_slot, obj_id,
-    origin, inv_cell, alive,
-    *, n_objects, cells, base_levels, block_w=128, root_unconditional=True,
-    interpret=None,
-):
-    del block_w, interpret
-    qq = _quantize_queries(jnp, queries, origin, inv_cell, cells)
-    act = _sweep_jnp(
-        qq, mbr_q.astype(jnp.int32), parent_q.astype(jnp.int32),
-        root_unconditional=root_unconditional, uncond_from=base_levels,
-    )
-    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))
-    cand = jnp.transpose(act[obj_level, :, obj_slot])
-    hit = cand & _overlap(confirm_mbr[None, :, :], queries[:, None, :])
-    hits = jnp.zeros((queries.shape[0], max(n_objects, 1)), jnp.bool_)
-    hits = hits.at[:, obj_id].max(hit)
-    return hits & alive[None, :], visits
-
-
-# ---------------------------------------------------------------------------
-# host rung: the same sweep in pure numpy (no device runtime at all)
-# ---------------------------------------------------------------------------
 
 
 def _sweep_np(queries, mbr_cm, parent, *, root_unconditional, uncond_from):
@@ -164,95 +102,278 @@ def _sweep_np(queries, mbr_cm, parent, *, root_unconditional, uncond_from):
     nq = queries.shape[0]
     uncond_from = levels if uncond_from is None else uncond_from
     acts = np.zeros((levels, nq, w), bool)
+    prev = None
     for l in range(levels):
         ov = _overlap(mbr_rm[l][None, :, :], queries[:, None, :])
-        if l == 0:
-            if root_unconditional and uncond_from > 0:
-                act = np.zeros((nq, w), bool)
-                act[:, 0] = True
-            else:
-                act = ov
-        elif l >= uncond_from:
-            act = ov
-        else:
-            act = ov & acts[l - 1][:, parent[l]]
-        acts[l] = act
+        acts[l] = _level_act(
+            np, ov, prev, parent[l], l=l, nq=nq, w=w,
+            root_unconditional=root_unconditional, uncond_from=uncond_from,
+        )
+        prev = acts[l]
     return acts
 
 
-def _scatter_hits_np(queries, act, obj_level, obj_slot, obj_id, n_objects,
-                     entry_gate):
-    visits = act.sum(axis=2).T.astype(np.int32)
-    hit = act[obj_level, :, obj_slot].T  # (Q, E)
-    if entry_gate is not None:
-        hit = hit & entry_gate
-    hits = np.zeros((queries.shape[0], max(n_objects, 1)), bool)
-    np.maximum.at(hits, (slice(None), obj_id), hit)
+def _stream_entry_sweep(xp, qeff, mbr_cm, parent, *, root_unconditional,
+                        uncond_from, obj_level, obj_slot):
+    """Memory-bounded sweep mirroring the HBM-streaming kernel: only the
+    previous level's (Q, W) survivor mask stays live; per-level visit
+    counts and object-entry activity are folded out incrementally instead
+    of stacking the (L, Q, W) mask.  Returns ``(hit (Q, E), visits
+    (Q, L))`` — bit-identical to the stacked path."""
+    levels, _, w = mbr_cm.shape
+    nq = qeff.shape[0]
+    uncond_from = levels if uncond_from is None else uncond_from
+    obj_level_h = np.asarray(obj_level)
+    obj_slot_h = np.asarray(obj_slot)
+    by_level = [np.nonzero(obj_level_h == l)[0] for l in range(levels)]
+    n_entries = obj_level_h.shape[0]
+    if xp is np:
+        hit = np.zeros((nq, n_entries), bool)
+    else:
+        hit = jnp.zeros((nq, n_entries), bool)
+    visits = []
+    prev = None
+    for l in range(levels):
+        rm = mbr_cm[l].T  # (W, 4)
+        ov = _overlap(rm[None, :, :], qeff[:, None, :])
+        act = _level_act(
+            xp, ov, prev, parent[l], l=l, nq=nq, w=w,
+            root_unconditional=root_unconditional, uncond_from=uncond_from,
+        )
+        visits.append(act.sum(axis=1).astype(xp.int32))
+        idx = by_level[l]
+        if idx.size:
+            cols = act[:, obj_slot_h[idx]]
+            if xp is np:
+                hit[:, idx] = cols
+            else:
+                hit = hit.at[:, idx].set(cols)
+        prev = act
+    return hit, xp.stack(visits, axis=1)
+
+
+def _sweep_hier(xp, qq8, qq16, mbr8, mbr16, parent, *, root_unconditional):
+    """(L, Q, W) active mask of the hierarchical (uint8 upper / uint16
+    lower) sweep — the rung twin of ``pyramid_scan.level_sweep_hier``."""
+    l8 = mbr8.shape[0]
+    levels = l8 + mbr16.shape[0]
+    nq = qq16.shape[0]
+    w = mbr16.shape[2]
+    acts = []
+    prev = None
+    for l in range(levels):
+        if l < l8:
+            rm = mbr8[l].T.astype(xp.int32)
+            ov = _overlap(rm[None, :, :], qq8[:, None, :])
+        else:
+            rm = mbr16[l - l8].T.astype(xp.int32)
+            ov = _overlap(rm[None, :, :], qq16[:, None, :])
+        act = _level_act(
+            xp, ov, prev, parent[l], l=l, nq=nq, w=w,
+            root_unconditional=root_unconditional, uncond_from=levels,
+        )
+        acts.append(act)
+        prev = act
+    if xp is np:
+        return np.stack(acts)
+    return jnp.stack(acts)
+
+
+def _finish(xp, queries, hit, visits, gate_mbr, obj_id, n_objects,
+            alive=None):
+    """Shared epilogue: exact confirm gate, global-id scatter, tombstones."""
+    if gate_mbr is not None:
+        hit = hit & _overlap(gate_mbr[None, :, :], queries[:, None, :])
+    nq = queries.shape[0]
+    if xp is np:
+        hits = np.zeros((nq, max(n_objects, 1)), bool)
+        np.maximum.at(hits, (slice(None), obj_id), hit)
+        visits = visits.astype(np.int32)
+    else:
+        hits = jnp.zeros((nq, max(n_objects, 1)), jnp.bool_)
+        hits = hits.at[:, obj_id].max(hit)
+        visits = visits.astype(jnp.int32)
+    if alive is not None:
+        hits = hits & alive[None, :]
     return hits, visits
+
+
+def _twin_search(xp, queries, qeff, mbr_cm, parent, obj_level, obj_slot,
+                 obj_id, *, n_objects, root_unconditional, uncond_from,
+                 gate_mbr, alive=None, stream=False):
+    """One generic region-search rung; every public twin is a thin shell.
+
+    ``qeff`` is what the sweep tests (float32 queries, or their outward
+    integer quantization on the compact rungs); ``queries`` stays float32
+    for the exact confirming gate."""
+    if stream:
+        hit, visits = _stream_entry_sweep(
+            xp, qeff, mbr_cm, parent,
+            root_unconditional=root_unconditional, uncond_from=uncond_from,
+            obj_level=obj_level, obj_slot=obj_slot,
+        )
+    else:
+        sweep = _sweep_np if xp is np else _sweep_jnp
+        act = sweep(
+            qeff, mbr_cm, parent,
+            root_unconditional=root_unconditional, uncond_from=uncond_from,
+        )
+        visits = xp.transpose(act.sum(axis=2).astype(xp.int32))
+        hit = xp.transpose(act[obj_level, :, obj_slot])
+    return _finish(
+        xp, queries, hit, visits, gate_mbr, obj_id, n_objects, alive=alive
+    )
+
+
+# ---------------------------------------------------------------------------
+# lax rung: jnp level sweep, jit/vmap-able, no pallas_call
+# ---------------------------------------------------------------------------
+
+
+def fused_search_lax(
+    queries, mbr_cm, parent, obj_mbr, obj_level, obj_slot, obj_id,
+    *, n_objects, block_w=128, root_unconditional=True,
+    test_object_mbr=True, interpret=None, stream=False,
+):
+    del block_w, interpret  # kernel-only tuning knobs
+    return _twin_search(
+        jnp, queries, queries, mbr_cm, parent, obj_level, obj_slot, obj_id,
+        n_objects=n_objects, root_unconditional=root_unconditional,
+        uncond_from=None, gate_mbr=obj_mbr if test_object_mbr else None,
+        stream=stream,
+    )
+
+
+def fused_search_live_lax(
+    queries, mbr_cm, parent, obj_mbr, obj_level, obj_slot, obj_id, alive,
+    *, n_objects, base_levels, block_w=128, root_unconditional=True,
+    test_object_mbr=True, interpret=None, stream=False,
+):
+    del block_w, interpret
+    return _twin_search(
+        jnp, queries, queries, mbr_cm, parent, obj_level, obj_slot, obj_id,
+        n_objects=n_objects, root_unconditional=root_unconditional,
+        uncond_from=base_levels,
+        gate_mbr=obj_mbr if test_object_mbr else None,
+        alive=alive, stream=stream,
+    )
+
+
+def fused_search_compact_lax(
+    queries, mbr_q, parent_q, confirm_mbr, obj_level, obj_slot, obj_id,
+    origin, inv_cell,
+    *, n_objects, cells, block_w=128, root_unconditional=True,
+    interpret=None, stream=False,
+):
+    del block_w, interpret
+    qq = _quantize_queries(jnp, queries, origin, inv_cell, cells)
+    return _twin_search(
+        jnp, queries, qq, mbr_q.astype(jnp.int32), parent_q.astype(jnp.int32),
+        obj_level, obj_slot, obj_id,
+        n_objects=n_objects, root_unconditional=root_unconditional,
+        uncond_from=None, gate_mbr=confirm_mbr, stream=stream,
+    )
+
+
+def fused_search_compact_live_lax(
+    queries, mbr_q, parent_q, confirm_mbr, obj_level, obj_slot, obj_id,
+    origin, inv_cell, alive,
+    *, n_objects, cells, base_levels, block_w=128, root_unconditional=True,
+    interpret=None, stream=False,
+):
+    del block_w, interpret
+    qq = _quantize_queries(jnp, queries, origin, inv_cell, cells)
+    return _twin_search(
+        jnp, queries, qq, mbr_q.astype(jnp.int32), parent_q.astype(jnp.int32),
+        obj_level, obj_slot, obj_id,
+        n_objects=n_objects, root_unconditional=root_unconditional,
+        uncond_from=base_levels, gate_mbr=confirm_mbr, alive=alive,
+        stream=stream,
+    )
+
+
+def fused_search_compact8_lax(
+    queries, mbr_q8, mbr_q16, parent_q, confirm_mbr, obj_level, obj_slot,
+    obj_id, origin, inv_cell, inv_cell8,
+    *, n_objects, cells, cells8, split, block_w=128,
+    root_unconditional=True, interpret=None,
+):
+    """lax rung of :func:`repro.kernels.ops.fused_search_compact8`: the
+    hierarchical uint8/uint16 sweep in plain jnp (DESIGN.md §12)."""
+    del block_w, interpret
+    qq16 = _quantize_queries(jnp, queries, origin, inv_cell, cells)
+    if split == 0:
+        act = _sweep_jnp(
+            qq16, mbr_q16.astype(jnp.int32), parent_q.astype(jnp.int32),
+            root_unconditional=root_unconditional, uncond_from=None,
+        )
+    else:
+        qq8 = _quantize_queries(jnp, queries, origin, inv_cell8, cells8)
+        act = _sweep_hier(
+            jnp, qq8, qq16, mbr_q8, mbr_q16, parent_q.astype(jnp.int32),
+            root_unconditional=root_unconditional,
+        )
+    visits = jnp.transpose(act.sum(axis=2).astype(jnp.int32))
+    hit = jnp.transpose(act[obj_level, :, obj_slot])
+    return _finish(jnp, queries, hit, visits, confirm_mbr, obj_id, n_objects)
+
+
+# ---------------------------------------------------------------------------
+# host rung: the same sweep in pure numpy (no device runtime at all)
+# ---------------------------------------------------------------------------
 
 
 def fused_search_np(
     queries, mbr_cm, parent, obj_mbr, obj_level, obj_slot, obj_id,
     *, n_objects, block_w=128, root_unconditional=True,
-    test_object_mbr=True, interpret=None,
+    test_object_mbr=True, interpret=None, stream=False,
 ):
     del block_w, interpret
     queries = np.asarray(queries, np.float32)
-    act = _sweep_np(
-        queries, np.asarray(mbr_cm), np.asarray(parent),
-        root_unconditional=root_unconditional, uncond_from=None,
-    )
-    gate = (
-        _overlap(np.asarray(obj_mbr)[None, :, :], queries[:, None, :])
-        if test_object_mbr else None
-    )
-    return _scatter_hits_np(
-        queries, act, np.asarray(obj_level), np.asarray(obj_slot),
-        np.asarray(obj_id), n_objects, gate,
+    return _twin_search(
+        np, queries, queries, np.asarray(mbr_cm), np.asarray(parent),
+        np.asarray(obj_level), np.asarray(obj_slot), np.asarray(obj_id),
+        n_objects=n_objects, root_unconditional=root_unconditional,
+        uncond_from=None,
+        gate_mbr=np.asarray(obj_mbr) if test_object_mbr else None,
+        stream=stream,
     )
 
 
 def fused_search_live_np(
     queries, mbr_cm, parent, obj_mbr, obj_level, obj_slot, obj_id, alive,
     *, n_objects, base_levels, block_w=128, root_unconditional=True,
-    test_object_mbr=True, interpret=None,
+    test_object_mbr=True, interpret=None, stream=False,
 ):
     del block_w, interpret
     queries = np.asarray(queries, np.float32)
-    act = _sweep_np(
-        queries, np.asarray(mbr_cm), np.asarray(parent),
-        root_unconditional=root_unconditional, uncond_from=base_levels,
+    return _twin_search(
+        np, queries, queries, np.asarray(mbr_cm), np.asarray(parent),
+        np.asarray(obj_level), np.asarray(obj_slot), np.asarray(obj_id),
+        n_objects=n_objects, root_unconditional=root_unconditional,
+        uncond_from=base_levels,
+        gate_mbr=np.asarray(obj_mbr) if test_object_mbr else None,
+        alive=np.asarray(alive, bool), stream=stream,
     )
-    gate = (
-        _overlap(np.asarray(obj_mbr)[None, :, :], queries[:, None, :])
-        if test_object_mbr else None
-    )
-    hits, visits = _scatter_hits_np(
-        queries, act, np.asarray(obj_level), np.asarray(obj_slot),
-        np.asarray(obj_id), n_objects, gate,
-    )
-    return hits & np.asarray(alive, bool)[None, :], visits
 
 
 def fused_search_compact_np(
     queries, mbr_q, parent_q, confirm_mbr, obj_level, obj_slot, obj_id,
     origin, inv_cell,
     *, n_objects, cells, block_w=128, root_unconditional=True,
-    interpret=None,
+    interpret=None, stream=False,
 ):
     del block_w, interpret
     queries = np.asarray(queries, np.float32)
     qq = _quantize_queries(
         np, queries, np.asarray(origin), np.asarray(inv_cell), cells
     )
-    act = _sweep_np(
-        qq, np.asarray(mbr_q, np.int32), np.asarray(parent_q, np.int32),
-        root_unconditional=root_unconditional, uncond_from=None,
-    )
-    gate = _overlap(np.asarray(confirm_mbr)[None, :, :], queries[:, None, :])
-    return _scatter_hits_np(
-        queries, act, np.asarray(obj_level), np.asarray(obj_slot),
-        np.asarray(obj_id), n_objects, gate,
+    return _twin_search(
+        np, queries, qq, np.asarray(mbr_q, np.int32),
+        np.asarray(parent_q, np.int32),
+        np.asarray(obj_level), np.asarray(obj_slot), np.asarray(obj_id),
+        n_objects=n_objects, root_unconditional=root_unconditional,
+        uncond_from=None, gate_mbr=np.asarray(confirm_mbr), stream=stream,
     )
 
 
@@ -260,23 +381,55 @@ def fused_search_compact_live_np(
     queries, mbr_q, parent_q, confirm_mbr, obj_level, obj_slot, obj_id,
     origin, inv_cell, alive,
     *, n_objects, cells, base_levels, block_w=128, root_unconditional=True,
-    interpret=None,
+    interpret=None, stream=False,
 ):
     del block_w, interpret
     queries = np.asarray(queries, np.float32)
     qq = _quantize_queries(
         np, queries, np.asarray(origin), np.asarray(inv_cell), cells
     )
-    act = _sweep_np(
-        qq, np.asarray(mbr_q, np.int32), np.asarray(parent_q, np.int32),
-        root_unconditional=root_unconditional, uncond_from=base_levels,
+    return _twin_search(
+        np, queries, qq, np.asarray(mbr_q, np.int32),
+        np.asarray(parent_q, np.int32),
+        np.asarray(obj_level), np.asarray(obj_slot), np.asarray(obj_id),
+        n_objects=n_objects, root_unconditional=root_unconditional,
+        uncond_from=base_levels, gate_mbr=np.asarray(confirm_mbr),
+        alive=np.asarray(alive, bool), stream=stream,
     )
-    gate = _overlap(np.asarray(confirm_mbr)[None, :, :], queries[:, None, :])
-    hits, visits = _scatter_hits_np(
-        queries, act, np.asarray(obj_level), np.asarray(obj_slot),
-        np.asarray(obj_id), n_objects, gate,
+
+
+def fused_search_compact8_np(
+    queries, mbr_q8, mbr_q16, parent_q, confirm_mbr, obj_level, obj_slot,
+    obj_id, origin, inv_cell, inv_cell8,
+    *, n_objects, cells, cells8, split, block_w=128,
+    root_unconditional=True, interpret=None,
+):
+    """host rung of the hierarchical uint8/uint16 sweep (DESIGN.md §12)."""
+    del block_w, interpret
+    queries = np.asarray(queries, np.float32)
+    qq16 = _quantize_queries(
+        np, queries, np.asarray(origin), np.asarray(inv_cell), cells
     )
-    return hits & np.asarray(alive, bool)[None, :], visits
+    if split == 0:
+        act = _sweep_np(
+            qq16, np.asarray(mbr_q16, np.int32), np.asarray(parent_q, np.int32),
+            root_unconditional=root_unconditional, uncond_from=None,
+        )
+    else:
+        qq8 = _quantize_queries(
+            np, queries, np.asarray(origin), np.asarray(inv_cell8), cells8
+        )
+        act = _sweep_hier(
+            np, qq8, qq16, np.asarray(mbr_q8), np.asarray(mbr_q16),
+            np.asarray(parent_q, np.int32),
+            root_unconditional=root_unconditional,
+        )
+    visits = act.sum(axis=2).T.astype(np.int32)
+    hit = act[np.asarray(obj_level), :, np.asarray(obj_slot)].T
+    return _finish(
+        np, queries, hit, visits, np.asarray(confirm_mbr),
+        np.asarray(obj_id), n_objects,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -420,5 +573,8 @@ FALLBACKS = {
     ("compact", False): (fused_search_compact_lax, fused_search_compact_np),
     ("compact", True): (
         fused_search_compact_live_lax, fused_search_compact_live_np,
+    ),
+    ("compact8", False): (
+        fused_search_compact8_lax, fused_search_compact8_np,
     ),
 }

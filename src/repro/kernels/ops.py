@@ -13,7 +13,11 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .build import build_levels_jnp as build_levels_jnp  # noqa: F401
+from .build import build_levels_pallas as build_levels_pallas  # noqa: F401
 from .build import device_schedule as _device_schedule
+from .build import hilbert_keys as hilbert_keys  # noqa: F401 (re-export)
+from .build import hilbert_permute as hilbert_permute  # noqa: F401
 from .flash_attention import flash_attention as _flash
 from .join_scan import _fused_join
 from .join_scan import pair_sweep as _pair_sweep
@@ -22,12 +26,18 @@ from .mqr_sparse_attention import mqr_sparse_attention as _sparse
 from .pyramid_scan import (
     _fused_search,
     _fused_search_compact,
+    _fused_search_compact8,
     _fused_search_compact_live,
     _fused_search_live,
 )
+from .pyramid_scan import level_sweep as level_sweep  # noqa: F401
+from .pyramid_scan import level_sweep_hier as level_sweep_hier  # noqa: F401
+from .pyramid_scan import parent_windows as parent_windows  # noqa: F401
 from .pyramid_scan import per_level_region_search as _per_level
 from .pyramid_scan import pyramid_scan as _pyramid_scan
 from .pyramid_scan import pyramid_scan_compact as _pyramid_scan_compact
+from .pyramid_scan import pyramid_scan_compact8 as _pyramid_scan_compact8
+from .quantize import grid_params as grid_params  # noqa: F401 (re-export)
 from .quantize import quantize_rows as quantize_rows  # noqa: F401 (re-export)
 from .quantize import quantize_schedule as _quantize_schedule
 from .rmsnorm import rmsnorm as _rmsnorm
@@ -61,6 +71,9 @@ def fused_search(
     root_unconditional: bool = True,
     test_object_mbr: bool = True,
     interpret: bool | None = None,
+    stream: bool = False,
+    win_off=None,
+    win_w: int | None = None,
 ):
     """Array-level public entry of the fused sweep (DESIGN.md §3.3).
 
@@ -68,6 +81,10 @@ def fused_search(
     ``LevelSchedule`` arrays, so callers (e.g. the spatial server) can
     ``vmap``/``pmap`` it over query blocks with the schedule arrays held
     constant.  Returns ``(hits (Q, n_objects), visits (Q, L))``.
+
+    ``stream=True`` runs the HBM-streaming double-buffered sweep
+    (DESIGN.md §12); pass the ``(win_off, win_w)`` parent windows from
+    :func:`parent_windows` alongside.
     """
     if interpret is None:
         interpret = interpret_default()
@@ -78,6 +95,9 @@ def fused_search(
         root_unconditional=root_unconditional,
         test_object_mbr=test_object_mbr,
         interpret=interpret,
+        stream=stream,
+        win_off=win_off,
+        win_w=win_w,
     )
 
 
@@ -90,6 +110,9 @@ def fused_search_live(
     root_unconditional: bool = True,
     test_object_mbr: bool = True,
     interpret: bool | None = None,
+    stream: bool = False,
+    win_off=None,
+    win_w: int | None = None,
 ):
     """Live-update variant of :func:`fused_search` (DESIGN.md §8): the
     level grid carries ``base_levels`` hierarchical levels plus appended
@@ -106,6 +129,9 @@ def fused_search_live(
         root_unconditional=root_unconditional,
         test_object_mbr=test_object_mbr,
         interpret=interpret,
+        stream=stream,
+        win_off=win_off,
+        win_w=win_w,
     )
 
 
@@ -119,6 +145,9 @@ def fused_search_compact_live(
     block_w: int = 128,
     root_unconditional: bool = True,
     interpret: bool | None = None,
+    stream: bool = False,
+    win_off=None,
+    win_w: int | None = None,
 ):
     """Live-update variant of :func:`fused_search_compact`: uint16 base
     tiles + quantized flat delta levels in one integer sweep, exact
@@ -134,6 +163,9 @@ def fused_search_compact_live(
         block_w=block_w,
         root_unconditional=root_unconditional,
         interpret=interpret,
+        stream=stream,
+        win_off=win_off,
+        win_w=win_w,
     )
 
 
@@ -192,41 +224,66 @@ def pair_sweep(a_cm, a_parent, b_cm, b_parent, *, block_a: int = 128,
 
 
 def device_schedule(mbrs, *, levels=None, engine: str = "auto",
-                    block_n: int = 128, interpret: bool | None = None):
+                    block_n: int = 128, interpret: bool | None = None,
+                    order: str | None = None):
     """Device-resident bulk build straight to a ``LevelSchedule`` — no
     host pointer tree, no ``flatten()`` (DESIGN.md §7).  ``engine="auto"``
     picks the one-launch Pallas build kernel when compiling natively and
     the object set fits its VMEM residency, the jit'd jnp fixed point
     otherwise; both are bit-identical to the host
-    ``flat.pyramid_schedule`` lowering."""
+    ``flat.pyramid_schedule`` lowering.  ``order="hilbert"`` permutes the
+    real slots of every level into Hilbert-curve order of their MBR
+    centers after the build (DESIGN.md §12) — hit sets, visit counts and
+    reported ids are unchanged; only tile locality improves."""
     if interpret is None:
         interpret = interpret_default()
     return _device_schedule(
         mbrs, levels=levels, engine=engine, block_n=block_n,
-        interpret=interpret,
+        interpret=interpret, order=order,
     )
 
 
 def quantize_schedule(schedule, *, engine: str = "auto", block_w: int = 128,
-                      interpret: bool | None = None):
+                      interpret: bool | None = None, upper8: bool = False,
+                      split: int | None = None):
     """Lower a ``LevelSchedule`` to its conservative uint16 tile form
-    (``QuantizedSchedule``, DESIGN.md §7) for the compact fused scan."""
+    (``QuantizedSchedule``, DESIGN.md §7) for the compact fused scan.
+    ``upper8=True`` adds coarse uint8 tiles for levels ``[0, split)`` on
+    a 254-cell grid — the hierarchical form :func:`pyramid_scan_compact8`
+    sweeps (DESIGN.md §12)."""
     if interpret is None:
         interpret = interpret_default()
     return _quantize_schedule(
-        schedule, engine=engine, block_w=block_w, interpret=interpret
+        schedule, engine=engine, block_w=block_w, interpret=interpret,
+        upper8=upper8, split=split,
     )
 
 
 def pyramid_scan_compact(qsched, queries, *, block_w: int = 128,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None,
+                         stream: bool = False):
     """Fused region search over uint16 tiles + exact float32 confirming
     pass: hit sets bit-identical to :func:`pyramid_scan` at ~half the
     streamed bytes per query; ``visits`` reports the compact sweep's own
-    conservative access counts (DESIGN.md §7)."""
+    conservative access counts (DESIGN.md §7).  ``stream=True`` runs the
+    HBM-streaming sweep (DESIGN.md §12)."""
     if interpret is None:
         interpret = interpret_default()
     return _pyramid_scan_compact(
+        qsched, queries, block_w=block_w, interpret=interpret, stream=stream
+    )
+
+
+def pyramid_scan_compact8(qsched, queries, *, block_w: int = 128,
+                          interpret: bool | None = None):
+    """Hierarchical compact region search (DESIGN.md §12): coarse uint8
+    tiles gate the upper levels, uint16 tiles the lower, and the exact
+    float32 confirming pass keeps hit sets bit-identical to
+    :func:`pyramid_scan`.  Needs ``quantize_schedule(..., upper8=True)``;
+    upper-level streamed bytes drop ~2x vs the uint16 form."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _pyramid_scan_compact8(
         qsched, queries, block_w=block_w, interpret=interpret
     )
 
@@ -240,6 +297,9 @@ def fused_search_compact(
     block_w: int = 128,
     root_unconditional: bool = True,
     interpret: bool | None = None,
+    stream: bool = False,
+    win_off=None,
+    win_w: int | None = None,
 ):
     """Array-level public entry of the compact sweep (the ``precision=
     "compact"`` analogue of :func:`fused_search`), ``vmap``/``pmap``-able
@@ -251,6 +311,40 @@ def fused_search_compact(
         origin, inv_cell,
         n_objects=n_objects,
         cells=cells,
+        block_w=block_w,
+        root_unconditional=root_unconditional,
+        interpret=interpret,
+        stream=stream,
+        win_off=win_off,
+        win_w=win_w,
+    )
+
+
+def fused_search_compact8(
+    queries, mbr_q8, mbr_q16, parent_q, confirm_mbr, obj_level, obj_slot,
+    obj_id, origin, inv_cell, inv_cell8,
+    *,
+    n_objects: int,
+    cells: int,
+    cells8: int,
+    split: int,
+    block_w: int = 128,
+    root_unconditional: bool = True,
+    interpret: bool | None = None,
+):
+    """Array-level public entry of the hierarchical uint8/uint16 sweep
+    (the ``precision="compact8"`` analogue of :func:`fused_search_compact`,
+    DESIGN.md §12): ``mbr_q8`` carries the coarse tiles of levels
+    ``[0, split)``, ``mbr_q16`` the fine tiles of levels ``[split, L)``."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _fused_search_compact8(
+        queries, mbr_q8, mbr_q16, parent_q, confirm_mbr, obj_level, obj_slot,
+        obj_id, origin, inv_cell, inv_cell8,
+        n_objects=n_objects,
+        cells=cells,
+        cells8=cells8,
+        split=split,
         block_w=block_w,
         root_unconditional=root_unconditional,
         interpret=interpret,
@@ -268,13 +362,18 @@ def mbr_scan(mbrs, queries, *, block_n: int = 512):
 
 
 def pyramid_scan(schedule, queries, *, block_w: int = 128,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, stream: bool = False):
     """Fused multi-level region search: one launch for the whole levelized
     sweep (DESIGN.md §3.3).  Returns (hits (Q, n_obj), visits (Q, L)).
-    ``interpret=None`` follows :func:`interpret_default`."""
+    ``interpret=None`` follows :func:`interpret_default`.  ``stream=True``
+    runs the HBM-streaming double-buffered sweep (DESIGN.md §12): MBR
+    tiles stay in HBM and are DMA'd through a two-slot VMEM buffer, so
+    VMEM residency no longer bounds the schedule width."""
     if interpret is None:
         interpret = interpret_default()
-    return _pyramid_scan(schedule, queries, block_w=block_w, interpret=interpret)
+    return _pyramid_scan(
+        schedule, queries, block_w=block_w, interpret=interpret, stream=stream
+    )
 
 
 def per_level_region_search(schedule, queries, *, block_w: int = 128):

@@ -18,10 +18,21 @@ Python between levels.  This kernel fuses the whole levelized sweep of a
   (broadcasted-iota compare + ``jnp.dot``) so it runs on the MXU instead of
   a lane gather.
 
+The VMEM-resident layout above caps single-chip width: the two survivor
+masks alone cost ``2·Q·W·4`` bytes of VMEM.  ``stream=True`` switches to
+the HBM-streaming variant (DESIGN.md §12): MBR/parent tiles live in HBM
+(``memory_space=ANY``) and are double-buffered into VMEM with explicit
+async copies (copy of tile ``t+1`` overlaps compute of tile ``t``,
+``emit_pipeline``-style), and the survivor masks ping-pong through an HBM
+scratch — each grid step only reads back the narrow *parent window*
+actually referenced by its tile (``parent_windows``).  Per-step VMEM then
+scales with ``Q·(win_w + O(block_w))`` instead of ``Q·W``, which is what
+lets one chip sweep 1e7+ objects.
+
 The kernel emits the full per-level active mask; a thin jnp epilogue (still
 one kernel launch) reduces it to object hits and per-level access counts
 that are bit-identical to the host pointer search / ``bulk.pyramid_search``
-(tests/test_pyramid_scan.py).
+(tests/test_pyramid_scan.py, tests/test_stream_scan.py).
 """
 
 from __future__ import annotations
@@ -38,6 +49,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.flat import (
     NEVER_MBR,
+    Q8_NEVER_MBR,
     Q_NEVER_MBR,
     LevelSchedule,
     QuantizedSchedule,
@@ -63,6 +75,25 @@ def _overlap_tile(q_ref, mbr_tile):
         & (qlx <= hx[None, :])
         & (ly[None, :] <= qhy)
         & (qly <= hy[None, :])
+    )
+
+
+def _act_formula(ov, parent_active, *, l, t, block_w, root_unconditional,
+                 uncond_from):
+    """The shared per-tile active-mask recurrence of every sweep kernel."""
+    if root_unconditional:
+        # The pointer search always examines the root node (slot 0).
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, block_w), 1)[0]
+        root = (t * block_w + col) == 0
+        act0 = jnp.broadcast_to(root[None, :], ov.shape)
+    else:
+        act0 = ov
+    # Levels at or past ``uncond_from`` are FLAT appendices (the live-update
+    # delta buffer, DESIGN.md §8): every slot is tested against the query
+    # directly, with no parent gating — a linear scan fused into the same
+    # launch as the hierarchical sweep.
+    return jnp.where(
+        l == 0, act0, jnp.where(l >= uncond_from, ov, parent_active & ov)
     )
 
 
@@ -101,30 +132,305 @@ def _sweep_kernel(
         pa = jnp.take(prev_ref[...], parent_row, axis=1)
     parent_active = pa > 0.5
 
-    if root_unconditional:
-        # The pointer search always examines the root node (slot 0).
-        col = jax.lax.broadcasted_iota(jnp.int32, (1, block_w), 1)[0]
-        root = (t * block_w + col) == 0
-        act0 = jnp.broadcast_to(root[None, :], ov.shape)
-    else:
-        act0 = ov
-    # Levels at or past ``uncond_from`` are FLAT appendices (the live-update
-    # delta buffer, DESIGN.md §8): every slot is tested against the query
-    # directly, with no parent gating — a linear scan fused into the same
-    # launch as the hierarchical sweep.
-    act = jnp.where(
-        l == 0, act0, jnp.where(l >= uncond_from, ov, parent_active & ov)
+    act = _act_formula(
+        ov, parent_active, l=l, t=t, block_w=block_w,
+        root_unconditional=root_unconditional, uncond_from=uncond_from,
     )
 
     cur_ref[:, pl.ds(t * block_w, block_w)] = act.astype(jnp.float32)
     act_ref[0] = act
 
 
+def _hier_sweep_kernel(
+    q8_ref,      # (Q, 4) i32 — queries on the coarse uint8 grid
+    q16_ref,     # (Q, 4) i32 — queries on the fine uint16 grid
+    mbr8_ref,    # (1, 4, BW) u8 tile (level index clamped to < split)
+    mbr16_ref,   # (1, 4, BW) u16 tile (level index clamped to >= split)
+    parent_ref,  # (1, BW)
+    act_ref,     # out (1, Q, BW) bool
+    prev_ref,    # scratch (Q, W) f32
+    cur_ref,     # scratch (Q, W) f32
+    *,
+    block_w: int,
+    width: int,
+    split: int,
+    root_unconditional: bool,
+    onehot_gather: bool,
+    uncond_from: int,
+):
+    """Two-segment sweep: coarse uint8 tiles for levels < ``split``, fine
+    uint16 tiles after (DESIGN.md §12).  Both BlockSpec index maps clamp
+    into their own segment, so each step fetches one narrow tile and the
+    level selects which overlap result feeds the shared recurrence."""
+    l = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when((t == 0) & (l > 0))
+    def _roll():
+        prev_ref[...] = cur_ref[...]
+
+    ov8 = _overlap_tile(q8_ref, mbr8_ref[0])
+    ov16 = _overlap_tile(q16_ref, mbr16_ref[0])
+    ov = jnp.where(l < split, ov8, ov16)
+
+    parent_row = parent_ref[0].astype(jnp.int32)
+    if onehot_gather:
+        iota = jax.lax.broadcasted_iota(jnp.int32, (width, block_w), 0)
+        onehot = (iota == parent_row[None, :]).astype(jnp.float32)
+        pa = jnp.dot(prev_ref[...], onehot, preferred_element_type=jnp.float32)
+    else:
+        pa = jnp.take(prev_ref[...], parent_row, axis=1)
+    parent_active = pa > 0.5
+
+    act = _act_formula(
+        ov, parent_active, l=l, t=t, block_w=block_w,
+        root_unconditional=root_unconditional, uncond_from=uncond_from,
+    )
+
+    cur_ref[:, pl.ds(t * block_w, block_w)] = act.astype(jnp.float32)
+    act_ref[0] = act
+
+
+def _stream_sweep_kernel(
+    winoff_ref,  # (L, T) SMEM i32 — parent-window start of every tile
+    q_ref,       # (Q, 4) VMEM, resident
+    mbr_hbm,     # (L, 4, Wp) ANY (HBM) — streamed, never VMEM-resident
+    par_hbm,     # (L, Wp) ANY (HBM)
+    act_ref,     # out (1, Q, BW) bool
+    mbr_buf,     # VMEM (2, 4, BW) — double-buffered tile landing slots
+    par_buf,     # VMEM (2, BW)
+    win_buf,     # VMEM (2, Q, win_w) f32 — double-buffered parent windows
+    cur_buf,     # VMEM (1, Q, BW) f32 — this tile's survivors, staged out
+    mask_hbm,    # ANY (2, Q, Wp) f32 — ping-pong survivor masks (by level)
+    sem_in,      # DMA sems (2 slots × {mbr, parent})
+    sem_win,     # DMA sem — level-boundary window read
+    sem_pre,     # DMA sem — next-step window prefetch
+    sem_out,     # DMA sem — survivor write-back
+    *,
+    block_w: int,
+    win_w: int,
+    n_tiles: int,
+    n_steps: int,
+    root_unconditional: bool,
+    onehot_gather: bool,
+    uncond_from: int,
+):
+    """HBM-streaming twin of :func:`_sweep_kernel` (DESIGN.md §12).
+
+    Copy/compute overlap: at linear step ``s = l·T + t`` the tile for step
+    ``s+1`` is prefetched into VMEM slot ``(s+1) % 2`` while slot ``s % 2``
+    is consumed — the double-buffer recurrence ``emit_pipeline`` would
+    generate, written out so the survivor masks can ride an HBM scratch.
+    Level ``l`` writes its survivors to ``mask_hbm[l % 2]`` and reads its
+    parents from ``mask_hbm[(l+1) % 2]`` (= parity of ``l-1``), but only
+    the ``win_w``-wide window starting at ``winoff[l, t]`` that this
+    tile's parent slots actually span, so VMEM never holds a full-width
+    mask.
+
+    Dead-window skip: the window for step ``s+1`` is fetched (into the
+    other ``win_buf`` slot) before step ``s+1``'s tile copies are issued.
+    If no parent slot in it survived for ANY query, every activation in
+    tile ``s+1`` would gather a zero — the tile is provably all-dead, so
+    its MBR/parent DMA is skipped outright and only the zero write-back
+    happens. Root, flat-delta, and level-boundary tiles are always
+    fetched (the first tile of a level cannot read its window a step
+    early: the previous level's last write-back may still be in flight)."""
+    l = pl.program_id(0)
+    t = pl.program_id(1)
+    step = l * n_tiles + t
+    slot = jax.lax.rem(step, 2)
+
+    def tile_copies(li, ti, s):
+        return (
+            pltpu.make_async_copy(
+                mbr_hbm.at[pl.ds(li, 1), :, pl.ds(ti * block_w, block_w)],
+                mbr_buf.at[pl.ds(s, 1)],
+                sem_in.at[s, 0],
+            ),
+            pltpu.make_async_copy(
+                par_hbm.at[pl.ds(li, 1), pl.ds(ti * block_w, block_w)],
+                par_buf.at[pl.ds(s, 1)],
+                sem_in.at[s, 1],
+            ),
+        )
+
+    def win_copy(li, ti, s, sem):
+        # off < 0 marks a statically-empty tile; the copy is never
+        # started for one, the clamp only keeps the descriptor in range.
+        off = jnp.maximum(winoff_ref[li, ti], 0)
+        return pltpu.make_async_copy(
+            mask_hbm.at[pl.ds(jax.lax.rem(li + 1, 2), 1), :,
+                        pl.ds(off, win_w)],
+            win_buf.at[pl.ds(s, 1)],
+            sem,
+        )
+
+    def gated_at(li):
+        # Only hierarchical, non-root levels gate on the previous level's
+        # survivors; flat delta levels and level 0 test unconditionally.
+        return (li > 0) & (li < uncond_from)
+
+    gated = gated_at(l)
+    boundary = t == 0
+    empty = winoff_ref[l, t] < 0
+
+    @pl.when(step == 0)
+    def _warmup():  # first tile has no previous step to prefetch it
+        for c in tile_copies(l, t, slot):
+            c.start()
+
+    # Level-boundary window: read synchronously at this step (the mask of
+    # level l-1 is complete once level l starts, but was not yet at the
+    # previous step, when the boundary tile's copies were issued).
+    bwin = win_copy(l, t, slot, sem_win)
+
+    @pl.when(gated & boundary & ~empty)
+    def _boundary_win_start():
+        bwin.start()
+
+    @pl.when(gated & boundary & ~empty)
+    def _boundary_win_wait():
+        bwin.wait()
+
+    # Prefetch for step s+1 with dead-window skip: fetch the next tile's
+    # parent window first; tile copies are only issued if some parent
+    # slot in it is still alive for some query (and never for
+    # statically-empty tiles, at any level).
+    nxt = step + 1
+    l1 = jax.lax.div(nxt, n_tiles)
+    t1 = jax.lax.rem(nxt, n_tiles)
+    s1 = jax.lax.rem(nxt, 2)
+    empty1 = (nxt < n_steps) & (winoff_ref[jnp.minimum(l1, n_steps // n_tiles - 1), t1] < 0)
+    skippable1 = gated_at(l1) & (t1 != 0)
+    pwin = win_copy(jnp.minimum(l1, n_steps // n_tiles - 1), t1, s1, sem_pre)
+
+    @pl.when((nxt < n_steps) & skippable1 & ~empty1)
+    def _prefetch_win():
+        pwin.start()
+        pwin.wait()
+
+    live1 = jnp.max(win_buf[pl.ds(s1, 1)]) > 0.5
+
+    @pl.when((nxt < n_steps) & ~empty1 & (live1 | ~skippable1))
+    def _prefetch():  # overlap: next tile's copy rides this tile's compute
+        for c in tile_copies(l1, t1, s1):
+            c.start()
+
+    # Wait for our own tile — unless the previous step skipped its DMA.
+    # ``live`` re-reads the same window slot the skip decision used (it
+    # is untouched in between), so the predicate matches exactly.
+    live = jnp.max(win_buf[pl.ds(slot, 1)]) > 0.5
+    fetched = ~empty & (live | ~gated | boundary)
+
+    @pl.when(fetched)
+    def _tile_wait():
+        for c in tile_copies(l, t, slot):
+            c.wait()
+
+    ov = _overlap_tile(q_ref, mbr_buf[pl.ds(slot, 1)][0])  # (Q, BW)
+
+    parent_row = par_buf[pl.ds(slot, 1)][0].astype(jnp.int32)
+    # Window-local parent slot.  Real slots are guaranteed in-window by
+    # ``parent_windows``; padded slots may clamp to a garbage column, but
+    # their sentinel MBRs make ``ov`` False so the AND discards it.  At
+    # gated=False steps win_buf is stale/uninitialized — same argument:
+    # the selected branch of ``_act_formula`` never reads parent_active.
+    loc = jnp.clip(parent_row - winoff_ref[l, t], 0, win_w - 1)
+    win = win_buf[pl.ds(slot, 1)][0]  # (Q, win_w)
+    if onehot_gather:
+        iota = jax.lax.broadcasted_iota(jnp.int32, (win_w, block_w), 0)
+        onehot = (iota == loc[None, :]).astype(jnp.float32)
+        pa = jnp.dot(win, onehot, preferred_element_type=jnp.float32)
+    else:
+        pa = jnp.take(win, loc, axis=1)
+    parent_active = pa > 0.5
+
+    act = _act_formula(
+        ov, parent_active, l=l, t=t, block_w=block_w,
+        root_unconditional=root_unconditional, uncond_from=uncond_from,
+    )
+    # A skipped statically-empty tile never DMA'd its buffers, so ``ov``
+    # is stale garbage there — but its true activations are provably all
+    # zero (sentinel MBRs; the root mask is slot 0 of tile 0), so force
+    # exactly that.
+    act = act & ~empty
+
+    cur_buf[0] = act.astype(jnp.float32)
+    out_copy = pltpu.make_async_copy(
+        cur_buf,
+        mask_hbm.at[pl.ds(jax.lax.rem(l, 2), 1), :,
+                    pl.ds(t * block_w, block_w)],
+        sem_out,
+    )
+    out_copy.start()
+    out_copy.wait()
+    act_ref[0] = act
+
+
+def parent_windows(
+    parent,
+    n_real,
+    *,
+    block_w: int,
+    uncond_from: int | None = None,
+    levels: int | None = None,
+    win_unit: int = 128,
+) -> Tuple[np.ndarray, int]:
+    """Per-tile parent-window metadata for the streaming sweep.
+
+    For every (level, tile) of the padded grid, the window
+    ``[off, off + win_w)`` must cover the parent slots of the tile's real
+    entries.  Computed on the host from the concrete schedule arrays
+    (outside jit — the offsets feed the kernel through SMEM), with ONE
+    static ``win_w`` (the max span over all tiles, rounded up to
+    ``win_unit`` lanes and capped at the padded width, so adversarial
+    orderings degrade to a full-width window rather than a wrong answer).
+
+    Returns ``(win_off (levels, T) int32, win_w int)``.
+    """
+    parent = np.asarray(parent)
+    n_real = np.asarray(n_real)
+    n_levels, w = parent.shape
+    if levels is None:
+        levels = n_levels
+    if uncond_from is None:
+        uncond_from = n_levels
+    pad = (-w) % block_w
+    wp = w + pad
+    n_tiles = wp // block_w
+    big = np.iinfo(np.int64).max
+    tmin = np.full((levels, n_tiles), big, np.int64)
+    tmax = np.full((levels, n_tiles), -1, np.int64)
+    gate_top = min(n_levels, uncond_from, len(n_real), levels)
+    for l in range(1, gate_top):
+        nr = int(n_real[l])
+        p = parent[l].astype(np.int64)
+        valid = np.arange(w) < nr
+        lo = np.concatenate([np.where(valid, p, big), np.full(pad, big)])
+        hi = np.concatenate([np.where(valid, p, -1), np.full(pad, -1)])
+        tmin[l] = lo.reshape(n_tiles, block_w).min(axis=1)
+        tmax[l] = hi.reshape(n_tiles, block_w).max(axis=1)
+    spans = np.where(tmax >= tmin, tmax - tmin + 1, 1)
+    span = max(1, int(spans.max()))
+    win_w = min(wp, int(-(-span // win_unit)) * win_unit)
+    win_w = max(win_w, min(wp, win_unit))
+    off = np.where(tmin == big, 0, np.minimum(tmin, wp - win_w))
+    off = np.clip(off, 0, max(wp - win_w, 0)).astype(np.int32)
+    # Statically-empty tiles (every slot past n_real[l]) can never
+    # activate — sentinel MBRs overlap nothing and the root mask is slot
+    # 0 only — so mark them with off = -1: the streaming kernel skips
+    # their DMA outright, at every level including root and flat ones.
+    tidx = np.arange(n_tiles) * block_w
+    for l in range(min(levels, n_levels, len(n_real))):
+        off[l, tidx >= int(n_real[l])] = -1
+    return np.ascontiguousarray(off), win_w
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
         "block_w", "root_unconditional", "interpret", "onehot_gather",
-        "uncond_from",
+        "uncond_from", "stream", "win_w",
     ),
 )
 def level_sweep(
@@ -137,6 +443,9 @@ def level_sweep(
     interpret: bool = False,
     onehot_gather: bool | None = None,
     uncond_from: int | None = None,
+    stream: bool = False,
+    win_off: jnp.ndarray | None = None,   # (L, T) i32, see parent_windows
+    win_w: int | None = None,
 ) -> jnp.ndarray:
     """Run the fused sweep; returns the (L, Q, W) per-level active mask.
 
@@ -144,6 +453,11 @@ def level_sweep(
     skip the parent gate and test every slot against the query directly —
     how the live-update delta buffer rides the same launch (DESIGN.md §8).
     ``None`` (the default) keeps the whole sweep hierarchical.
+
+    ``stream=True`` runs the HBM-streaming kernel instead of the
+    VMEM-resident one (bit-identical masks, DESIGN.md §12); it requires
+    the ``(win_off, win_w)`` pair from :func:`parent_windows` computed
+    with the same ``block_w`` and ``uncond_from``.
     """
     levels, _, w = mbr_cm.shape
     q = queries.shape[0]
@@ -164,15 +478,137 @@ def level_sweep(
             [parent, jnp.zeros((levels, pad), parent.dtype)], axis=1
         )
     wp = w + pad
-    grid = (levels, wp // block_w)
+    n_tiles = wp // block_w
+    grid = (levels, n_tiles)
     if onehot_gather is None:
         # The MXU one-hot matmul is the native TPU lowering; the column
         # gather is cheaper (O(Q·W) vs O(Q·W²/BW)) where gathers are free.
         onehot_gather = not interpret
+    uncond = levels if uncond_from is None else uncond_from
+    if not stream:
+        kernel = functools.partial(
+            _sweep_kernel,
+            block_w=block_w,
+            width=wp,
+            root_unconditional=root_unconditional,
+            onehot_gather=onehot_gather,
+            uncond_from=uncond,
+        )
+        act = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((q, 4), lambda l, t: (0, 0)),
+                pl.BlockSpec((1, 4, block_w), lambda l, t: (l, 0, t)),
+                pl.BlockSpec((1, block_w), lambda l, t: (l, t)),
+            ],
+            out_specs=pl.BlockSpec((1, q, block_w), lambda l, t: (l, 0, t)),
+            out_shape=jax.ShapeDtypeStruct((levels, q, wp), jnp.bool_),
+            scratch_shapes=[
+                pltpu.VMEM((q, wp), jnp.float32),
+                pltpu.VMEM((q, wp), jnp.float32),
+            ],
+            interpret=interpret,
+        )(queries, mbr_cm, parent)
+        return act[:, :, :w]
+    if win_off is None or win_w is None:
+        raise ValueError(
+            "stream=True needs (win_off, win_w) from parent_windows()"
+        )
+    win_w = min(win_w, wp)
     kernel = functools.partial(
-        _sweep_kernel,
+        _stream_sweep_kernel,
+        block_w=block_w,
+        win_w=win_w,
+        n_tiles=n_tiles,
+        n_steps=levels * n_tiles,
+        root_unconditional=root_unconditional,
+        onehot_gather=onehot_gather,
+        uncond_from=uncond,
+    )
+    act = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((levels, n_tiles), lambda l, t: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((q, 4), lambda l, t: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, q, block_w), lambda l, t: (l, 0, t)),
+        out_shape=jax.ShapeDtypeStruct((levels, q, wp), jnp.bool_),
+        scratch_shapes=[
+            pltpu.VMEM((2, 4, block_w), mbr_cm.dtype),
+            pltpu.VMEM((2, block_w), parent.dtype),
+            pltpu.VMEM((2, q, win_w), jnp.float32),
+            pltpu.VMEM((1, q, block_w), jnp.float32),
+            pltpu.ANY((2, q, wp), jnp.float32),
+            pltpu.SemaphoreType.DMA((2, 2)),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(jnp.asarray(win_off, jnp.int32), queries, mbr_cm, parent)
+    return act[:, :, :w]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block_w", "split", "root_unconditional", "interpret",
+        "onehot_gather", "uncond_from",
+    ),
+)
+def level_sweep_hier(
+    q8: jnp.ndarray,      # (Q, 4) i32 — coarse-grid queries
+    q16: jnp.ndarray,     # (Q, 4) i32 — fine-grid queries
+    mbr8: jnp.ndarray,    # (split, 4, W) u8
+    mbr16: jnp.ndarray,   # (L - split, 4, W) u16
+    parent: jnp.ndarray,  # (L, W)
+    *,
+    split: int,
+    block_w: int = 128,
+    root_unconditional: bool = True,
+    interpret: bool = False,
+    onehot_gather: bool | None = None,
+    uncond_from: int | None = None,
+) -> jnp.ndarray:
+    """Hierarchical two-grid sweep: uint8 tiles for levels < ``split``,
+    uint16 after; returns the (L, Q, W) active mask (DESIGN.md §12)."""
+    l8 = mbr8.shape[0]
+    l16 = mbr16.shape[0]
+    levels = l8 + l16
+    assert split == l8 and split >= 1
+    w = mbr16.shape[2]
+    q = q16.shape[0]
+    pad = (-w) % block_w
+    if pad:
+        mbr8 = jnp.concatenate(
+            [mbr8,
+             jnp.broadcast_to(jnp.asarray(Q8_NEVER_MBR)[None, :, None],
+                              (l8, 4, pad))],
+            axis=2,
+        )
+        mbr16 = jnp.concatenate(
+            [mbr16,
+             jnp.broadcast_to(jnp.asarray(Q_NEVER_MBR)[None, :, None],
+                              (l16, 4, pad))],
+            axis=2,
+        )
+        parent = jnp.concatenate(
+            [parent, jnp.zeros((levels, pad), parent.dtype)], axis=1
+        )
+    wp = w + pad
+    grid = (levels, wp // block_w)
+    if onehot_gather is None:
+        onehot_gather = not interpret
+    kernel = functools.partial(
+        _hier_sweep_kernel,
         block_w=block_w,
         width=wp,
+        split=split,
         root_unconditional=root_unconditional,
         onehot_gather=onehot_gather,
         uncond_from=levels if uncond_from is None else uncond_from,
@@ -182,7 +618,18 @@ def level_sweep(
         grid=grid,
         in_specs=[
             pl.BlockSpec((q, 4), lambda l, t: (0, 0)),
-            pl.BlockSpec((1, 4, block_w), lambda l, t: (l, 0, t)),
+            pl.BlockSpec((q, 4), lambda l, t: (0, 0)),
+            # Each segment's index map clamps into its own level range, so
+            # out-of-segment steps fetch a (discarded) boundary tile
+            # instead of reading past the array.
+            pl.BlockSpec(
+                (1, 4, block_w),
+                lambda l, t: (jnp.minimum(l, split - 1), 0, t),
+            ),
+            pl.BlockSpec(
+                (1, 4, block_w),
+                lambda l, t: (jnp.maximum(l - split, 0), 0, t),
+            ),
             pl.BlockSpec((1, block_w), lambda l, t: (l, t)),
         ],
         out_specs=pl.BlockSpec((1, q, block_w), lambda l, t: (l, 0, t)),
@@ -192,15 +639,46 @@ def level_sweep(
             pltpu.VMEM((q, wp), jnp.float32),
         ],
         interpret=interpret,
-    )(queries, mbr_cm, parent)
+    )(q8, q16, mbr8, mbr16, parent)
     return act[:, :, :w]
+
+
+def _quantize_queries(queries, origin, inv_cell, cells: int):
+    """Outward query quantization onto a schedule grid (floor lo, ceil hi,
+    clip into the domain) — shared by the compact and hier sweeps."""
+    t = (queries - origin[None, :]) * inv_cell[None, :]
+    qq = jnp.concatenate([jnp.floor(t[:, :2]), jnp.ceil(t[:, 2:])], axis=1)
+    return jnp.clip(qq, 0.0, float(cells)).astype(jnp.int32)
+
+
+def _hits_epilogue(act, queries, gate_mbr, obj_level, obj_slot, obj_id,
+                   n_objects: int, alive=None):
+    """Shared jnp epilogue: (L, Q, W) active mask -> (hits, visits).
+
+    Per-level access counts: padded slots carry sentinel MBRs and are
+    never active, so a plain sum counts exactly the visited real nodes.
+    Entry e hits iff its holding node is active and (when ``gate_mbr`` is
+    given) its exact float32 MBR overlaps the query — the confirming pass
+    of the quantized paths and the object-MBR test of tree schedules are
+    the same operation."""
+    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))  # (Q, L)
+    hit = jnp.transpose(act[obj_level, :, obj_slot])           # (Q, E)
+    if gate_mbr is not None:
+        hit = hit & _overlaps(gate_mbr[None, :, :], queries[:, None, :])
+    q = queries.shape[0]
+    hits = jnp.zeros((q, max(n_objects, 1)), jnp.bool_)
+    hits = hits.at[:, obj_id].max(hit)
+    if alive is not None:
+        # Tombstone mask: deleted ids drop out here, in the same jit program.
+        hits = hits & alive[None, :]
+    return hits, visits
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "n_objects", "block_w", "root_unconditional", "test_object_mbr",
-        "interpret",
+        "interpret", "stream", "win_w",
     ),
 )
 def _fused_search(
@@ -211,26 +689,23 @@ def _fused_search(
     root_unconditional: bool,
     test_object_mbr: bool,
     interpret: bool,
+    stream: bool = False,
+    win_off=None,
+    win_w: int | None = None,
 ):
     act = level_sweep(
         queries, mbr_cm, parent,
         block_w=block_w,
         root_unconditional=root_unconditional,
         interpret=interpret,
+        stream=stream,
+        win_off=win_off,
+        win_w=win_w,
     )  # (L, Q, W)
-    # Per-level access counts: padded slots carry sentinel MBRs and are
-    # never active, so a plain sum counts exactly the visited real nodes.
-    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))  # (Q, L)
-    # Object-hit epilogue: entry e hits iff its holding node is active
-    # (and, for tree schedules, its own MBR overlaps the query).
-    entry_act = act[obj_level, :, obj_slot]  # (E, Q)
-    hit = jnp.transpose(entry_act)           # (Q, E)
-    if test_object_mbr:
-        hit = hit & _overlaps(obj_mbr[None, :, :], queries[:, None, :])
-    q = queries.shape[0]
-    hits = jnp.zeros((q, max(n_objects, 1)), jnp.bool_)
-    hits = hits.at[:, obj_id].max(hit)
-    return hits, visits
+    return _hits_epilogue(
+        act, queries, obj_mbr if test_object_mbr else None,
+        obj_level, obj_slot, obj_id, n_objects,
+    )
 
 
 def pyramid_scan(
@@ -239,6 +714,7 @@ def pyramid_scan(
     *,
     block_w: int = 128,
     interpret: bool = False,
+    stream: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused region search over a :class:`LevelSchedule`.
 
@@ -246,7 +722,15 @@ def pyramid_scan(
     visits (Q, L) int32 per-level access counts — both identical to the
     host pointer search (tree schedules) / ``bulk.pyramid_search``
     (pyramid schedules).  ONE kernel launch regardless of tree height.
+    ``stream=True`` uses the HBM-streaming kernel (DESIGN.md §12) —
+    bit-identical results, VMEM bounded by the tile/window working set.
     """
+    win_off, win_w = (None, None)
+    if stream:
+        win_off, win_w = parent_windows(
+            schedule.parent, schedule.n_real, block_w=block_w
+        )
+        win_off = jnp.asarray(win_off)
     return _fused_search(
         jnp.asarray(queries, jnp.float32),
         jnp.asarray(schedule.mbr_cm),
@@ -260,6 +744,9 @@ def pyramid_scan(
         root_unconditional=schedule.root_unconditional,
         test_object_mbr=schedule.test_object_mbr,
         interpret=interpret,
+        stream=stream,
+        win_off=win_off,
+        win_w=win_w,
     )
 
 
@@ -267,6 +754,7 @@ def pyramid_scan(
     jax.jit,
     static_argnames=(
         "n_objects", "cells", "block_w", "root_unconditional", "interpret",
+        "stream", "win_w",
     ),
 )
 def _fused_search_compact(
@@ -278,6 +766,9 @@ def _fused_search_compact(
     block_w: int,
     root_unconditional: bool,
     interpret: bool,
+    stream: bool = False,
+    win_off=None,
+    win_w: int | None = None,
 ):
     """Fused sweep over uint16 tiles + exact float32 confirming pass.
 
@@ -291,22 +782,19 @@ def _fused_search_compact(
     actually performed — the conservative sweep may touch slightly more
     nodes per level than the exact one (DESIGN.md §7).
     """
-    t = (queries - origin[None, :]) * inv_cell[None, :]
-    qq = jnp.concatenate([jnp.floor(t[:, :2]), jnp.ceil(t[:, 2:])], axis=1)
-    qq = jnp.clip(qq, 0.0, float(cells)).astype(jnp.int32)
+    qq = _quantize_queries(queries, origin, inv_cell, cells)
     act = level_sweep(
         qq, mbr_q, parent_q,
         block_w=block_w,
         root_unconditional=root_unconditional,
         interpret=interpret,
+        stream=stream,
+        win_off=win_off,
+        win_w=win_w,
     )  # (L, Q, W) candidate mask, superset of the exact active mask
-    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))  # (Q, L)
-    cand = jnp.transpose(act[obj_level, :, obj_slot])          # (Q, E)
-    hit = cand & _overlaps(confirm_mbr[None, :, :], queries[:, None, :])
-    q = queries.shape[0]
-    hits = jnp.zeros((q, max(n_objects, 1)), jnp.bool_)
-    hits = hits.at[:, obj_id].max(hit)
-    return hits, visits
+    return _hits_epilogue(
+        act, queries, confirm_mbr, obj_level, obj_slot, obj_id, n_objects
+    )
 
 
 def pyramid_scan_compact(
@@ -315,10 +803,17 @@ def pyramid_scan_compact(
     *,
     block_w: int = 128,
     interpret: bool = False,
+    stream: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused region search over a :class:`QuantizedSchedule`: half the
     streamed bytes per tile, hit sets bit-identical to the float32 path;
     ``visits`` reports the compact sweep's own (conservative) accesses."""
+    win_off, win_w = (None, None)
+    if stream:
+        win_off, win_w = parent_windows(
+            qsched.parent_q, qsched.base.n_real, block_w=block_w
+        )
+        win_off = jnp.asarray(win_off)
     return _fused_search_compact(
         jnp.asarray(queries, jnp.float32),
         jnp.asarray(qsched.mbr_q),
@@ -334,6 +829,105 @@ def pyramid_scan_compact(
         block_w=block_w,
         root_unconditional=qsched.base.root_unconditional,
         interpret=interpret,
+        stream=stream,
+        win_off=win_off,
+        win_w=win_w,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_objects", "cells", "cells8", "split", "block_w",
+        "root_unconditional", "interpret",
+    ),
+)
+def _fused_search_compact8(
+    queries, mbr_q8, mbr_q16, parent_q, confirm_mbr, obj_level, obj_slot,
+    obj_id, origin, inv_cell, inv_cell8,
+    *,
+    n_objects: int,
+    cells: int,
+    cells8: int,
+    split: int,
+    block_w: int,
+    root_unconditional: bool,
+    interpret: bool,
+):
+    """Hierarchically quantized sweep: uint8 coarse tiles for the upper
+    ``split`` levels, uint16 fine tiles below, one launch (DESIGN.md §12).
+
+    Conservativity is per-level and grid-independent: both grids round
+    node boxes AND queries outward, so each level's candidate mask is a
+    superset of the exact sweep's regardless of cell size, and the exact
+    confirming pass keeps hit sets bit-identical.  Only ``visits`` may
+    inflate on the coarse levels (those are exactly the levels whose fat
+    MBRs make extra candidates cheap — the skip-quadtree intuition)."""
+    qq16 = _quantize_queries(queries, origin, inv_cell, cells)
+    if split == 0:  # degenerate (single-level) schedule: plain compact
+        act = level_sweep(
+            qq16, mbr_q16, parent_q,
+            block_w=block_w,
+            root_unconditional=root_unconditional,
+            interpret=interpret,
+        )
+    else:
+        qq8 = _quantize_queries(queries, origin, inv_cell8, cells8)
+        act = level_sweep_hier(
+            qq8, qq16, mbr_q8, mbr_q16, parent_q,
+            split=split,
+            block_w=block_w,
+            root_unconditional=root_unconditional,
+            interpret=interpret,
+        )
+    return _hits_epilogue(
+        act, queries, confirm_mbr, obj_level, obj_slot, obj_id, n_objects
+    )
+
+
+def pyramid_scan_compact8(
+    qsched: QuantizedSchedule,
+    queries,
+    *,
+    block_w: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused region search over the hierarchical (uint8 upper-level) form
+    of a :class:`QuantizedSchedule` — ``quantize_schedule(..., upper8=
+    True)``.  Hit sets bit-identical to every other precision; upper-level
+    tiles stream at 1 byte per coordinate (DESIGN.md §12)."""
+    if not qsched.hierarchical and qsched.levels > 1:
+        raise ValueError(
+            "pyramid_scan_compact8 needs quantize_schedule(..., upper8=True)"
+        )
+    split = qsched.split
+    return _fused_search_compact8(
+        jnp.asarray(queries, jnp.float32),
+        jnp.asarray(
+            qsched.mbr_q8
+            if qsched.mbr_q8 is not None
+            else np.zeros((0, 4, qsched.width), np.uint8)
+        ),
+        jnp.asarray(qsched.mbr_q[split:]),
+        jnp.asarray(qsched.parent_q),
+        jnp.asarray(qsched.confirm_mbr),
+        jnp.asarray(qsched.base.obj_level),
+        jnp.asarray(qsched.base.obj_slot),
+        jnp.asarray(qsched.base.obj_id),
+        jnp.asarray(qsched.origin),
+        jnp.asarray(qsched.inv_cell),
+        jnp.asarray(
+            qsched.inv_cell8
+            if qsched.inv_cell8 is not None
+            else qsched.inv_cell
+        ),
+        n_objects=qsched.n_objects,
+        cells=qsched.cells,
+        cells8=qsched.cells8,
+        split=split,
+        block_w=block_w,
+        root_unconditional=qsched.base.root_unconditional,
+        interpret=interpret,
     )
 
 
@@ -341,7 +935,7 @@ def pyramid_scan_compact(
     jax.jit,
     static_argnames=(
         "n_objects", "base_levels", "block_w", "root_unconditional",
-        "test_object_mbr", "interpret",
+        "test_object_mbr", "interpret", "stream", "win_w",
     ),
 )
 def _fused_search_live(
@@ -353,6 +947,9 @@ def _fused_search_live(
     root_unconditional: bool,
     test_object_mbr: bool,
     interpret: bool,
+    stream: bool = False,
+    win_off=None,
+    win_w: int | None = None,
 ):
     """Fused sweep over base levels + appended flat delta levels.
 
@@ -369,25 +966,21 @@ def _fused_search_live(
         root_unconditional=root_unconditional,
         interpret=interpret,
         uncond_from=base_levels,
+        stream=stream,
+        win_off=win_off,
+        win_w=win_w,
     )  # (L_base + D, Q, W)
-    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))  # (Q, L+D)
-    entry_act = act[obj_level, :, obj_slot]  # (E + C, Q)
-    hit = jnp.transpose(entry_act)           # (Q, E + C)
-    if test_object_mbr:
-        hit = hit & _overlaps(obj_mbr[None, :, :], queries[:, None, :])
-    q = queries.shape[0]
-    hits = jnp.zeros((q, max(n_objects, 1)), jnp.bool_)
-    hits = hits.at[:, obj_id].max(hit)
-    # Tombstone mask: deleted ids drop out here, in the same jit program.
-    hits = hits & alive[None, :]
-    return hits, visits
+    return _hits_epilogue(
+        act, queries, obj_mbr if test_object_mbr else None,
+        obj_level, obj_slot, obj_id, n_objects, alive=alive,
+    )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "n_objects", "cells", "base_levels", "block_w",
-        "root_unconditional", "interpret",
+        "root_unconditional", "interpret", "stream", "win_w",
     ),
 )
 def _fused_search_compact_live(
@@ -400,6 +993,9 @@ def _fused_search_compact_live(
     block_w: int,
     root_unconditional: bool,
     interpret: bool,
+    stream: bool = False,
+    win_off=None,
+    win_w: int | None = None,
 ):
     """Compact (uint16-tile) twin of :func:`_fused_search_live`.
 
@@ -409,24 +1005,21 @@ def _fused_search_compact_live(
     the tombstone-masked hit sets stay bit-identical to the float32 live
     path (DESIGN.md §8).
     """
-    t = (queries - origin[None, :]) * inv_cell[None, :]
-    qq = jnp.concatenate([jnp.floor(t[:, :2]), jnp.ceil(t[:, 2:])], axis=1)
-    qq = jnp.clip(qq, 0.0, float(cells)).astype(jnp.int32)
+    qq = _quantize_queries(queries, origin, inv_cell, cells)
     act = level_sweep(
         qq, mbr_q, parent_q,
         block_w=block_w,
         root_unconditional=root_unconditional,
         interpret=interpret,
         uncond_from=base_levels,
+        stream=stream,
+        win_off=win_off,
+        win_w=win_w,
     )
-    visits = jnp.transpose(act.sum(axis=2, dtype=jnp.int32))
-    cand = jnp.transpose(act[obj_level, :, obj_slot])
-    hit = cand & _overlaps(confirm_mbr[None, :, :], queries[:, None, :])
-    q = queries.shape[0]
-    hits = jnp.zeros((q, max(n_objects, 1)), jnp.bool_)
-    hits = hits.at[:, obj_id].max(hit)
-    hits = hits & alive[None, :]
-    return hits, visits
+    return _hits_epilogue(
+        act, queries, confirm_mbr, obj_level, obj_slot, obj_id, n_objects,
+        alive=alive,
+    )
 
 
 def per_level_region_search(

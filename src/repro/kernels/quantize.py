@@ -26,15 +26,23 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.flat import CELLS, Q_NEVER_MBR, LevelSchedule, QuantizedSchedule
+from repro.core.flat import (
+    CELLS,
+    CELLS8,
+    Q_NEVER_MBR,
+    LevelSchedule,
+    QuantizedSchedule,
+)
 
 
-def grid_params(schedule: LevelSchedule):
+def grid_params(schedule: LevelSchedule, cells: int = CELLS):
     """Derive the per-axis grid from the object-MBR union (== root box).
 
     Returns ``(origin (4,) f32, inv_cell (4,) f32)`` laid out
     coordinate-major (x, y, x, y) so they broadcast against the
-    ``(lx, ly, hx, hy)`` coordinate rows directly.
+    ``(lx, ly, hx, hy)`` coordinate rows directly.  ``cells`` picks the
+    grid resolution — ``CELLS`` for the uint16 form, ``CELLS8`` for the
+    coarse uint8 upper-level form (same origin either way).
     """
     obj = np.asarray(schedule.obj_mbr, np.float64)
     lo = obj[:, :2].min(axis=0)
@@ -44,22 +52,24 @@ def grid_params(schedule: LevelSchedule):
     # hits 0*inf=NaN.  With a capped scale the axis still quantizes
     # conservatively (everything lands in cells [0, 1]).
     with np.errstate(divide="ignore"):
-        inv = np.minimum(CELLS / np.maximum(hi - lo, 0.0), 1e30)
+        inv = np.minimum(cells / np.maximum(hi - lo, 0.0), 1e30)
     origin = np.concatenate([lo, lo]).astype(np.float32)
     inv_cell = np.concatenate([inv, inv]).astype(np.float32)
     return origin, inv_cell
 
 
-def quantize_cm_jnp(mbr_cm, origin, inv_cell):
-    """Reference (and large-array) quantizer: (L, 4, W) f32 -> uint16."""
+def quantize_cm_jnp(mbr_cm, origin, inv_cell, *, cells: int = CELLS,
+                    dtype=jnp.uint16):
+    """Reference (and large-array) quantizer: (L, 4, W) f32 -> ``dtype``
+    grid cells on a ``cells``-cell outward-rounded grid."""
     mbr_cm = jnp.asarray(mbr_cm, jnp.float32)
     t = (mbr_cm - origin[None, :, None]) * inv_cell[None, :, None]
     is_lo = (jnp.arange(4) < 2)[None, :, None]
     cell = jnp.where(is_lo, jnp.floor(t), jnp.ceil(t))
-    cell = jnp.clip(cell, 0.0, float(CELLS))
+    cell = jnp.clip(cell, 0.0, float(cells))
     # lo=+inf sentinel (padded slot) -> integer never-overlap sentinel
-    cell = jnp.where(is_lo & (mbr_cm == jnp.inf), float(CELLS + 1), cell)
-    return cell.astype(jnp.uint16)
+    cell = jnp.where(is_lo & (mbr_cm == jnp.inf), float(cells + 1), cell)
+    return cell.astype(dtype)
 
 
 def quantize_rows(mbrs: np.ndarray, origin: np.ndarray,
@@ -141,8 +151,18 @@ def quantize_schedule(
     engine: str = "auto",
     block_w: int = 128,
     interpret: bool | None = None,
+    upper8: bool = False,
+    split: int | None = None,
 ) -> QuantizedSchedule:
-    """Lower a :class:`LevelSchedule` to its compact uint16 tile form."""
+    """Lower a :class:`LevelSchedule` to its compact uint16 tile form.
+
+    ``upper8=True`` additionally materializes coarse uint8 tiles for the
+    upper levels (``[0, split)``, default all but the deepest level) on a
+    254-cell grid sharing the same origin — the hierarchical form
+    :func:`repro.kernels.ops.pyramid_scan_compact8` sweeps (DESIGN.md
+    §12).  Outward rounding is resolution-independent, so the confirming
+    pass keeps hit sets bit-identical at any split.
+    """
     from . import ops  # runtime import: ops imports this module at load
 
     if interpret is None:
@@ -175,6 +195,18 @@ def quantize_schedule(
         confirm = np.ascontiguousarray(
             schedule.mbr_cm[schedule.obj_level, :, schedule.obj_slot]
         ).astype(np.float32)
+    mbr_q8 = None
+    inv_cell8 = None
+    if split is None:
+        split = max(schedule.levels - 1, 0) if upper8 else 0
+    if upper8 and split > 0:
+        _, inv_cell8 = grid_params(schedule, cells=CELLS8)
+        mbr_q8 = np.asarray(
+            quantize_cm_jnp(
+                schedule.mbr_cm[:split], jnp.asarray(origin),
+                jnp.asarray(inv_cell8), cells=CELLS8, dtype=jnp.uint8,
+            )
+        )
     return QuantizedSchedule(
         base=schedule,
         mbr_q=np.asarray(mbr_q),
@@ -183,4 +215,8 @@ def quantize_schedule(
         inv_cell=inv_cell,
         confirm_mbr=confirm,
         cells=CELLS,
+        mbr_q8=mbr_q8,
+        split=split if upper8 else 0,
+        cells8=CELLS8,
+        inv_cell8=inv_cell8,
     )

@@ -124,7 +124,7 @@ class SpatialServer:
     ):
         if interpret is None:
             interpret = ops.interpret_default()
-        if precision not in ("float32", "compact"):
+        if precision not in ("float32", "compact", "compact8"):
             raise ValueError(f"unknown precision {precision!r}")
         ladder = tuple(ladder)
         bad = [r for r in ladder if r not in LADDER]
@@ -165,6 +165,49 @@ class SpatialServer:
                 else ops.fused_search_live
             )
             kwargs = dict(block_w=block_w, interpret=interpret, **live.statics)
+        elif precision == "compact8":
+            # Hierarchical uint8-upper/uint16-lower tile form (DESIGN.md
+            # §12); hit sets bit-identical, upper-level bytes halved again.
+            # Live mutation normalizes compact8 -> compact upstream (delta
+            # levels ride the fine grid), so this branch is base-only.
+            qs = quantized
+            if qs is None:
+                qs = ops.quantize_schedule(
+                    schedule, interpret=interpret, upper8=True
+                )
+            if not qs.hierarchical and schedule.levels > 1:
+                raise ValueError(
+                    "precision='compact8' needs a hierarchical quantized "
+                    "schedule (quantize_schedule(..., upper8=True))"
+                )
+            split = qs.split
+            mbr_q8 = qs.mbr_q8
+            inv_cell8 = qs.inv_cell8
+            if mbr_q8 is None:  # single-level schedule: degenerate split=0
+                mbr_q8 = np.zeros((0, 4, qs.width), np.uint8)
+                inv_cell8 = qs.inv_cell
+            self._arrays = (
+                jnp.asarray(mbr_q8),
+                jnp.asarray(qs.mbr_q[split:]),
+                jnp.asarray(qs.parent_q),
+                jnp.asarray(qs.confirm_mbr),
+                jnp.asarray(schedule.obj_level),
+                jnp.asarray(schedule.obj_slot),
+                jnp.asarray(schedule.obj_id),
+                jnp.asarray(qs.origin),
+                jnp.asarray(qs.inv_cell),
+                jnp.asarray(inv_cell8),
+            )
+            fn = ops.fused_search_compact8
+            kwargs = dict(
+                n_objects=schedule.n_objects,
+                cells=qs.cells,
+                cells8=qs.cells8,
+                split=split,
+                block_w=block_w,
+                root_unconditional=schedule.root_unconditional,
+                interpret=interpret,
+            )
         elif precision == "compact":
             qs = quantized
             if qs is None:

@@ -77,9 +77,16 @@ class LiveEngine:
     # ------------------------------------------------------------------
     def _pallas(self, queries):
         precision = self.opts.get("precision", "float32")
+        # compact8 normalizes to compact under mutation: delta rows ride
+        # the fine uint16 grid, so the live launch is the compact twin
+        # (hit sets are bit-identical either way; DESIGN.md §12).  The
+        # live sweep is likewise always the VMEM-resident kernel — the
+        # streamed path serves frozen-base indexes.
+        if precision == "compact8":
+            precision = "compact"
         aug = self.log.augmented(precision)
         kwargs = dict(
-            block_w=self.opts.get("block_w", 128),
+            block_w=self.opts.get("block_w") or 128,
             interpret=self.opts.get("interpret"),
             **aug.statics,
         )
@@ -98,6 +105,8 @@ class LiveEngine:
 
         log = self.log
         precision = self.opts.get("precision", "float32")
+        if precision == "compact8":  # same normalization as _pallas
+            precision = "compact"
         key = (log.base_epoch, precision)
         if self._serve is None or self._serve[0] != key:
             # Fresh server per merge: a flush changes array shapes
@@ -107,9 +116,9 @@ class LiveEngine:
             aug = log.augmented(precision)
             server = SpatialServer(
                 log.base.schedule,
-                query_block=self.opts.get("query_block", 16),
+                query_block=self.opts.get("query_block") or 16,
                 cache_size=self.opts.get("cache_size", 4096),
-                block_w=self.opts.get("block_w", 128),
+                block_w=self.opts.get("block_w") or 128,
                 interpret=self.opts.get("interpret"),
                 precision=precision,
                 live=aug,

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from repro.core import bulk, datasets, flat
 from repro.index import SpatialIndex
 from repro.kernels import ops
-from repro.kernels.build import build_levels_pallas
+from repro.kernels.ops import build_levels_pallas
 
 DATASETS = {
     "uniform_squares": lambda: datasets.uniform_squares(300, seed=5),

@@ -1,0 +1,186 @@
+"""Build-time Hilbert leaf ordering is a pure renumbering (DESIGN.md §12).
+
+``hilbert_permute`` renumbers each level's real slots along the Hilbert
+curve of their MBR centers.  The contract: it is a within-level bijection
+(padded slots untouched) and the sweep is invariant under it — hit sets,
+``AccessStats`` ids, and per-level visit counts bit-identical on every
+structure × backend pair.  Only tile locality changes, which is what the
+bytes/query metric measures.
+"""
+import numpy as np
+import pytest
+
+import conftest
+from repro.index import SpatialIndex
+from repro.kernels import ops
+
+_N = 300
+STRUCTURES = ("mqr", "rtree", "pyramid")
+
+
+def _data(kind="uniform_squares", n=_N):
+    return conftest.mbr_dataset("test_hilbert", kind, n)
+
+
+def _queries(kind="uniform_squares", n=_N):
+    return conftest.dataset_queries("test_hilbert", kind, n)
+
+
+# ---------------------------------------------------------------------------
+# hilbert_keys: a bijection on the discrete grid
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("order", [1, 2, 4, 6])
+def test_hilbert_keys_bijection_on_full_grid(order):
+    n = 1 << order
+    gx, gy = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    # cell centers in [0, 1) so the internal floor lands on the lattice
+    keys = ops.hilbert_keys(
+        (gx.ravel() + 0.5) / n, (gy.ravel() + 0.5) / n, order=order
+    )
+    assert np.array_equal(np.sort(keys), np.arange(n * n))
+
+
+@pytest.mark.parametrize("order", [2, 4])
+def test_hilbert_keys_adjacent_cells(order):
+    """Consecutive curve positions are 4-adjacent grid cells — the
+    locality property the tiling win rests on."""
+    n = 1 << order
+    gx, gy = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    xs, ys = gx.ravel(), gy.ravel()
+    keys = ops.hilbert_keys((xs + 0.5) / n, (ys + 0.5) / n, order=order)
+    by_key = np.argsort(keys)
+    dx = np.abs(np.diff(xs[by_key]))
+    dy = np.abs(np.diff(ys[by_key]))
+    assert (dx + dy == 1).all()
+
+
+def test_hilbert_keys_clip_out_of_range():
+    keys = ops.hilbert_keys(
+        np.array([-0.5, 1.5]), np.array([2.0, -1.0]), order=4
+    )
+    lo = ops.hilbert_keys(np.array([0.0]), np.array([0.999]), order=4)
+    hi = ops.hilbert_keys(np.array([0.999]), np.array([0.0]), order=4)
+    assert keys[0] == lo[0] and keys[1] == hi[0]
+
+
+# ---------------------------------------------------------------------------
+# hilbert_permute: within-level bijection, sweep-invariant
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("structure", STRUCTURES)
+def test_hilbert_permute_is_within_level_bijection(structure):
+    idx = SpatialIndex.build(_data(), structure=structure, backend="pallas")
+    sched = idx.artifacts.schedule
+    perm = ops.hilbert_permute(sched)
+    assert perm.mbr_cm.shape == sched.mbr_cm.shape
+    for l in range(sched.levels):
+        nr = int(sched.n_real[l])
+        # real slots: same multiset of MBR columns, just renumbered
+        old = np.sort(sched.mbr_cm[l, :, :nr], axis=1)
+        new = np.sort(perm.mbr_cm[l, :, :nr], axis=1)
+        assert np.array_equal(new, old)
+        # padded slots untouched (sentinels stay where they were)
+        assert np.array_equal(perm.mbr_cm[l, :, nr:], sched.mbr_cm[l, :, nr:])
+        assert np.array_equal(perm.parent[l, nr:], sched.parent[l, nr:])
+        if l > 0:
+            # every remapped parent is a real slot of the level above
+            assert (np.asarray(perm.parent[l, :nr]) <
+                    int(sched.n_real[l - 1])).all()
+    # child→parent containment survives the renumbering
+    for l in range(1, sched.levels):
+        nr = int(sched.n_real[l])
+        p = np.asarray(perm.parent[l, :nr], np.int64)
+        child = perm.mbr_cm[l, :, :nr]
+        par = perm.mbr_cm[l - 1][:, p]
+        assert (par[0] <= child[0] + 1e-6).all()
+        assert (par[1] <= child[1] + 1e-6).all()
+        assert (par[2] >= child[2] - 1e-6).all()
+        assert (par[3] >= child[3] - 1e-6).all()
+
+
+def test_hilbert_permute_unpermuted_fields_shared():
+    idx = SpatialIndex.build(_data(), structure="mqr", backend="pallas")
+    sched = idx.artifacts.schedule
+    perm = ops.hilbert_permute(sched)
+    assert perm.obj_mbr is sched.obj_mbr
+    assert perm.obj_id is sched.obj_id
+    assert perm.n_objects == sched.n_objects
+
+
+@pytest.mark.parametrize("structure", STRUCTURES)
+@pytest.mark.parametrize("backend", ["lax", "pallas"])
+def test_hilbert_invariance_matrix(structure, backend):
+    """order="hilbert" changes nothing observable: hits, per-query ids,
+    and per-level visit counts all bit-identical across backends."""
+    data, qs = _data(), _queries()
+    plain = SpatialIndex.build(data, structure=structure, backend=backend)
+    hil = SpatialIndex.build(
+        data, structure=structure, backend=backend, order="hilbert"
+    )
+    ref = plain.region(qs)
+    res = hil.region(qs)
+    assert np.array_equal(res.hits, ref.hits)
+    assert np.array_equal(res.visits_per_level, ref.visits_per_level)
+    for i in range(qs.shape[0]):
+        assert np.array_equal(res.ids(i), ref.ids(i))
+
+
+def test_hilbert_invariance_compact_and_compact8():
+    data, qs = _data(), _queries()
+    plain = SpatialIndex.build(data, structure="mqr", backend="pallas")
+    hil = SpatialIndex.build(
+        data, structure="mqr", backend="pallas", order="hilbert"
+    )
+    ref = plain.region(qs)
+    for precision in ("compact", "compact8"):
+        res = hil.with_backend("pallas", precision=precision).region(qs)
+        assert np.array_equal(res.hits, ref.hits)
+
+
+def test_hilbert_access_stats_match():
+    data, qs = _data(), _queries()
+    plain = SpatialIndex.build(data, structure="mqr", backend="pallas")
+    hil = SpatialIndex.build(
+        data, structure="mqr", backend="pallas", order="hilbert"
+    )
+    plain.region(qs)
+    hil.region(qs)
+    assert hil.stats.node_accesses == plain.stats.node_accesses
+    assert hil.stats.queries == plain.stats.queries
+
+
+def test_hilbert_order_recorded_in_build_opts():
+    idx = SpatialIndex.build(_data(), order="hilbert")
+    assert idx.artifacts.build_opts.get("order") == "hilbert"
+
+
+def test_hilbert_save_load_no_double_permutation(tmp_path):
+    """The checkpoint stores the already-permuted schedule; restore must
+    NOT apply the permutation again."""
+    from repro.checkpoint.spatial import load_index, save_index
+
+    data, qs = _data(), _queries()
+    idx = SpatialIndex.build(
+        data, structure="mqr", backend="pallas", order="hilbert"
+    )
+    ref = idx.region(qs)
+    path = tmp_path / "hilbert.idx"
+    save_index(idx, path)
+    back = load_index(path, backend="pallas")
+    assert back.artifacts.build_opts.get("order") == "hilbert"
+    assert np.array_equal(
+        back.artifacts.schedule.parent, idx.artifacts.schedule.parent
+    )
+    res = back.region(qs)
+    assert np.array_equal(res.hits, ref.hits)
+    assert np.array_equal(res.visits_per_level, ref.visits_per_level)
+
+
+def test_order_validation():
+    with pytest.raises(ValueError, match="order"):
+        SpatialIndex.build(_data(), order="zorder")
+    with pytest.raises(ValueError):
+        ops.device_schedule(_data(), order="morton")

@@ -186,7 +186,7 @@ def test_unknown_backend_option_raises():
     with pytest.raises(TypeError):
         SpatialIndex.build(
             _data("uniform_squares"), structure="mqr", backend="pallas",
-            query_block=8,  # a serve-only option
+            cache_size=8,  # a serve-only option
         )
     with pytest.raises(TypeError):
         _host_index("mqr", "uniform_squares").with_backend("lax", block_w=64)
@@ -278,4 +278,30 @@ def test_no_private_kernel_imports_outside_kernels():
             for pat in (import_pat, attr_pat):
                 for m in pat.finditer(text):
                     offenders.append(f"{f.relative_to(root)}: {m.group(0)}")
+    assert not offenders, "\n".join(offenders)
+
+
+def test_kernel_entry_points_have_one_public_home():
+    """`repro.kernels.ops` is the ONE public home of the kernel entry
+    points (device_schedule, quantize_schedule, pyramid_scan*,
+    level_sweep, build_levels_*, hilbert_*, parent_windows, ...).
+    Outside kernels/, importing a kernel SUBMODULE other than the public
+    trio (`ops`, `fallback`, `autotune`) is forbidden — re-export shims
+    must not grow back (DESIGN.md §12)."""
+    root = pathlib.Path(__file__).resolve().parents[1]
+    allowed = {"ops", "fallback", "autotune"}
+    from_pat = re.compile(r"from\s+repro\.kernels\.(\w+)\s+import")
+    import_pat = re.compile(r"^\s*import\s+repro\.kernels\.(\w+)", re.M)
+    offenders = []
+    for sub in ("src", "tests", "benchmarks", "examples"):
+        for f in sorted((root / sub).rglob("*.py")):
+            if "kernels" in f.parts:
+                continue  # inside the kernel package, cross-imports are fine
+            text = f.read_text()
+            for pat in (from_pat, import_pat):
+                for m in pat.finditer(text):
+                    if m.group(1) not in allowed:
+                        offenders.append(
+                            f"{f.relative_to(root)}: {m.group(0)}"
+                        )
     assert not offenders, "\n".join(offenders)

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from repro.core import bulk, datasets, flat, mqrtree, rtree
 from repro.core import mbr as M
 from repro.kernels import ops
-from repro.kernels.pyramid_scan import level_sweep
+from repro.kernels.ops import level_sweep
 
 
 def host_search_by_level(tree, query, levels):
