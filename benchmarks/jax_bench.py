@@ -16,6 +16,8 @@ import numpy as np
 
 from repro.core import datasets, flat, kvindex, mqrtree
 from repro.kernels import ops
+from repro.obs import counters as obs_counters
+from repro.obs import trace as obs_trace
 
 TINY = os.environ.get("REPRO_BENCH_TINY", "0") == "1"
 
@@ -190,11 +192,10 @@ def bench_index_api():
 
     pts = np.random.default_rng(3).uniform(100, 900, (n_q, 2))
     idx.knn(pts, k)  # warm the expanding-radius round shapes
-    before = (idx.stats.node_accesses, idx.stats.knn_queries)
+    before = idx.stats.to_dict()
     t_knn = _timeit(lambda: idx.knn(pts, k).ids, iters=3)
-    accesses = (idx.stats.node_accesses - before[0]) / (
-        idx.stats.knn_queries - before[1]
-    )
+    delta = idx.stats.diff(before)  # windowed deltas, not lifetime totals
+    accesses = delta["node_accesses"] / max(delta["knn_queries"], 1)
     # Facade build throughput: `SpatialIndex.build(structure="pyramid",
     # build="device")` objects/sec across the crossover sizes, one row.
     build_ns = (200, 400) if TINY else (1_000, 10_000, 100_000)
@@ -457,11 +458,12 @@ def bench_moving():
     t0 = time.time()
     base.run(ticks)
     t_base = time.time() - t0
+    live_stats = live.query_index.stats.to_dict()
     return [
         (t_live, {"impl": "moving-delta-buffer", "ticks": ticks,
                   "ticks_per_sec": round(ticks / t_live, 2),
-                  "merges": live.query_index.stats.flushes,
-                  "joins": live.query_index.stats.joins}),
+                  "merges": live_stats["flushes"],
+                  "joins": live_stats["joins"]}),
         (t_base, {"impl": "moving-rebuild-per-tick", "ticks": ticks,
                   "ticks_per_sec": round(ticks / t_base, 2),
                   "speedup_vs_rebuild": round(t_base / t_live, 2)}),
@@ -508,114 +510,6 @@ def bench_serving():
           "deadline_launches": row["deadline_launches"]})
         for row in rows
     ]
-
-
-def _survivor_recurrence(mbr_grid, parent, qq_per_level, *,
-                         root_unconditional=True):
-    """Yield ``(l, tested, act)`` of the quantized sweep's own recurrence.
-
-    ``mbr_grid`` is the integer (L, 4, W) grid the sweep actually tests,
-    ``qq_per_level(l)`` the matching outward-quantized queries for level
-    ``l`` — so survivors here are the kernel's own, conservative widening
-    included.
-    """
-    levels, _, w = mbr_grid.shape
-    prev = None
-    for l in range(levels):
-        qq = qq_per_level(l)
-        rm = mbr_grid[l].T[None, :, :]  # (1, W, 4)
-        ov = (
-            (rm[..., 0] <= qq[:, None, 2]) & (qq[:, None, 0] <= rm[..., 2])
-            & (rm[..., 1] <= qq[:, None, 3]) & (qq[:, None, 1] <= rm[..., 3])
-        )
-        if l == 0:
-            tested = np.ones((qq.shape[0], w), bool)
-            if root_unconditional:
-                # the kernel's root mask is slot 0 only (_act_formula)
-                act = np.zeros_like(ov)
-                act[:, 0] = True
-            else:
-                act = ov
-        else:
-            tested = prev[:, parent[l]]
-            act = tested & ov
-        yield l, tested, act
-        prev = act
-
-
-def _tile_bytes_per_query(mbr_grid, parent, n_real, qq, *, split,
-                          levels8_bytes=384, levels16_bytes=640, tile=64,
-                          root_unconditional=True, qq8=None):
-    """Visited-tile HBM traffic of one quantized sweep, per query.
-
-    The fetch model is the paper's disk-access ledger at tile grain: a
-    64-slot tile is fetched at level ``l`` when any of its *real* slots
-    (``n_real[l]`` — padding slots alias parent 0 and must not count)
-    must be tested, i.e. its parent survived level ``l-1``; every tile at
-    the root.  A uint16 tile costs 64·4·2 B of MBR lanes + 64·2 B of
-    parent row = 640 B; a uint8 upper tile (levels < split) 64·4·1 +
-    64·2 = 384 B, tested against the coarse-grid queries ``qq8``.
-    """
-    n_q = qq.shape[0]
-    total = 0.0
-    sweep = _survivor_recurrence(
-        mbr_grid, parent, lambda l: qq8 if l < split else qq,
-        root_unconditional=root_unconditional,
-    )
-    for l, tested, _ in sweep:
-        nr = int(n_real[l])
-        tr = tested[:, :nr]
-        pad = (-nr) % tile
-        fetched = np.pad(tr, ((0, 0), (0, pad))).reshape(
-            n_q, -1, tile).any(axis=2).sum()
-        total += float(fetched) * (levels8_bytes if l < split
-                                   else levels16_bytes)
-    return total / n_q
-
-
-def _stream_fetch_bytes(mbr_grid, parent, qq, win_off, win_w, *,
-                        block_w=128, slot_bytes=10,
-                        root_unconditional=True):
-    """Per-launch HBM tile traffic of the dead-window-skip streamed sweep.
-
-    Mirrors ``_stream_sweep_kernel``'s fetch rule exactly: the
-    (block_w)-slot tile at (l, t) is DMA'd iff it is not statically
-    empty (``win_off[l, t] == -1`` marks tiles wholly past ``n_real``)
-    AND (``l == 0``, or ``t == 0`` — a level boundary's window cannot be
-    read a step early — or the parent window ``[win_off[l, t], +win_w)``
-    holds a survivor for ANY query in the batch).  Returns
-    ``(tile_bytes, mask_bytes, fetched, total_tiles)`` where
-    ``mask_bytes`` is the survivor-window traffic (window reads for
-    non-empty gated tiles + write-back of every tile) that the streaming
-    design pays for unbounded capacity.
-    """
-    levels, _, w = mbr_grid.shape
-    n_q = qq.shape[0]
-    wp = ((w + block_w - 1) // block_w) * block_w
-    n_tiles = wp // block_w
-    fetched, windows, prev = 0, 0, None
-    for l, _, act in _survivor_recurrence(
-            mbr_grid, parent, lambda l: qq,
-            root_unconditional=root_unconditional):
-        for t in range(n_tiles):
-            off = int(win_off[l, t])
-            if off < 0:
-                continue  # statically empty: never DMA'd
-            if l > 0:
-                windows += 1
-            if l == 0 or t == 0:
-                fetched += 1
-                continue
-            pv = np.pad(prev, ((0, 0), (0, wp - w)))
-            alive = pv.any(axis=0)  # batch union: one DMA serves all q
-            if alive[off:off + win_w].any():
-                fetched += 1
-        prev = act
-    total_tiles = levels * n_tiles
-    mask_bytes = (windows * n_q * win_w * 4          # window reads
-                  + total_tiles * n_q * block_w * 4)  # mask write-back
-    return (float(fetched * block_w * slot_bytes), float(mask_bytes),
-            fetched, total_tiles)
 
 
 def bench_stream_scan():
@@ -674,18 +568,17 @@ def bench_stream_scan():
     assert np.array_equal(np.asarray(h16), np.asarray(h8h))
     assert np.array_equal(np.asarray(h16), np.asarray(h16s))
 
-    def _qq(origin, inv_cell, cells):
-        t = (qs_b - origin[None, :]) * inv_cell[None, :]
-        qq = np.concatenate([np.floor(t[:, :2]), np.ceil(t[:, 2:])], axis=1)
-        return np.clip(qq, 0.0, float(cells)).astype(np.int64)
-
+    # The ledger math lives in repro.obs.counters — the SAME functions
+    # the kernel wrappers call to emit LaunchReports, so what the bench
+    # discloses and what production telemetry discloses are one number.
     n_real = np.asarray(plain.n_real, np.int64)
     g16 = np.asarray(q16.mbr_q, np.int64)
     p16 = np.asarray(q16.parent_q, np.int64)
-    qq16p = _qq(q16.origin, q16.inv_cell, q16.cells)
+    qq16p = obs_counters.quantize_queries_grid(
+        qs_b, q16.origin, q16.inv_cell, q16.cells)
     resident_bpq = q16.streamed_bytes / qs_b.shape[0]
     win_off, win_w = ops.parent_windows(p16, n_real, block_w=128)
-    tile_b, mask_b, fetched, n_tiles = _stream_fetch_bytes(
+    tile_b, mask_b, fetched, n_tiles, _ = obs_counters.stream_fetch_bytes(
         g16, p16, qq16p, win_off, win_w, block_w=128,
         root_unconditional=plain.root_unconditional,
     )
@@ -703,19 +596,22 @@ def bench_stream_scan():
     # this model is 384/640 = 0.6x, which uint8 upper tiles + Hilbert
     # leaf order approach; the coarse u8 grid really is what the upper
     # levels test, so the accounting mixes grids per level.
-    bpq16 = _tile_bytes_per_query(
+    bpq16 = obs_counters.tile_bytes_per_query(
         g16, p16, n_real, qq16p, split=0,
         root_unconditional=plain.root_unconditional,
     )
     mixed = np.asarray(q8h.mbr_q, np.int64).copy()
     if q8h.split:
         mixed[:q8h.split] = np.asarray(q8h.mbr_q8, np.int64)
-    bpq8h = _tile_bytes_per_query(
+    bpq8h = obs_counters.tile_bytes_per_query(
         mixed, np.asarray(q8h.parent_q, np.int64),
         np.asarray(hil.n_real, np.int64),
-        _qq(q8h.origin, q8h.inv_cell, q8h.cells), split=q8h.split,
+        obs_counters.quantize_queries_grid(
+            qs_b, q8h.origin, q8h.inv_cell, q8h.cells),
+        split=q8h.split,
         root_unconditional=hil.root_unconditional,
-        qq8=_qq(q8h.origin, q8h.inv_cell8, q8h.cells8),
+        qq8=obs_counters.quantize_queries_grid(
+            qs_b, q8h.origin, q8h.inv_cell8, q8h.cells8),
     )
     rows.append((0.0, {"impl": "bytes-visited-uint16", "n": nb,
                        "bytes/query": round(bpq16)}))
@@ -786,6 +682,58 @@ def bench_autotune():
     ]
 
 
+def bench_obs():
+    """Observability tax (DESIGN.md §13): the <2% guarantee, measured.
+
+    Rows: fused region q/s with tracing disabled vs enabled, plus the
+    analytic overhead of the disabled fast path — per-call cost of a
+    no-op ``span()`` (one enabled check returning the shared null span)
+    times the two spans every ``region()`` call opens (facade +
+    backend), as a percent of one region call.  The CI guard checks the
+    analytic number: a direct A/B at smoke sizes is swamped by
+    scheduler noise, the per-span cost is not.
+    """
+    from repro.index import SpatialIndex
+
+    n, n_q = (640, 8) if TINY else (4096, 32)
+    data = datasets.uniform_squares(n, seed=1)
+    qs = datasets.region_queries(data, n_q, seed=2).astype(np.float32)
+    idx = SpatialIndex.build(data, structure="pyramid", backend="pallas",
+                             build="device",
+                             backend_opts={"autotune": "off"})
+    obs_trace.disable()
+    t_off = _timeit(lambda: idx.region(qs).hits, iters=3)
+    obs_trace.enable(capacity=1 << 16)
+    try:
+        t_on = _timeit(lambda: idx.region(qs).hits, iters=3)
+    finally:
+        obs_trace.disable()
+
+    # per-span cost of the disabled fast path, amortized over K spans
+    k = 20_000
+
+    def noop_spans():
+        for _ in range(k):
+            with obs_trace.span("bench.noop"):
+                pass
+
+    t_span = _timeit(noop_spans, iters=3) / k
+    spans_per_region = 2  # index.region + backend.<name>
+    overhead_pct = 100.0 * spans_per_region * t_span / t_off
+    return [
+        (t_off, {"impl": "fused-tracing-off", "n": n,
+                 "q/s": round(n_q / t_off, 1)}),
+        (t_on, {"impl": "fused-tracing-on", "n": n,
+                "q/s": round(n_q / t_on, 1),
+                "qs_ratio": round((n_q / t_on) / (n_q / t_off), 4)}),
+        (t_span * spans_per_region,
+         {"impl": "disabled-span-tax",
+          "per_span_ns": round(t_span * 1e9, 1),
+          "spans_per_region": spans_per_region,
+          "overhead_pct": round(overhead_pct, 4)}),
+    ]
+
+
 JAX_BENCHES = {
     "jax_flat_search": bench_flat_search,
     "jax_pyramid_build": bench_pyramid_build,
@@ -794,6 +742,7 @@ JAX_BENCHES = {
     "kernel_compact_scan": bench_compact_scan,
     "bench_stream_scan": bench_stream_scan,
     "bench_autotune": bench_autotune,
+    "bench_obs": bench_obs,
     "index_api": bench_index_api,
     "live_update": bench_live_update,
     "durability": bench_durability,

@@ -238,6 +238,30 @@ def main():
           f"({int(ref.hits.sum())} hits; autotuner caches winners in "
           "BuildArtifacts.tuned)")
 
+    # 12. Observability (DESIGN.md §13): trace spans + the per-launch
+    # byte ledger + a metrics snapshot.  Tracing off costs one attribute
+    # check; the ledger is opt-in and discloses the SAME numbers
+    # bench_stream_scan computes, bit for bit.
+    from repro.obs import counters, trace
+
+    trace.enable()
+    counters.collect_launch_reports(True)
+    res = tuned.region(qs.astype(np.float32))
+    rep = res.launch_report
+    counters.collect_launch_reports(False)
+    trace.get_tracer().export_chrome_trace("trace.json")
+    trace.disable()
+    prom = tuned.metrics(tenant="quickstart").to_prometheus()
+    n_spans = sum(1 for e in trace.get_tracer().events() if e["ph"] == "X")
+    print(f"\nobservability: {n_spans} spans -> trace.json (open in "
+          f"Perfetto); launch ledger: {rep.bytes_streamed:.0f} B streamed "
+          f"over {rep.tiles_fetched}/{rep.tiles_total} tiles "
+          f"({rep.tiles_skipped} skipped dead); metrics snapshot "
+          f"{len(prom.splitlines())} Prometheus lines, e.g.")
+    for line in prom.splitlines():
+        if line.startswith("repro_index_queries"):
+            print(f"  {line}")
+
 
 if __name__ == "__main__":
     main()

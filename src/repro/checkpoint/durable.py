@@ -46,6 +46,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import trace as _obs_trace
 from repro.update.wal import WriteAheadLog, recover_wal
 
 from .spatial import load_index, save_index, snapshot_meta
@@ -277,13 +278,14 @@ class DurableIndex:
         """The WAL-before-apply discipline, with kill sites around every
         boundary: the record is durable before index state changes, so
         the surviving prefix is exactly what replay reconstructs."""
-        self._op_event("pre-append")       # kill here: op lost, state clean
-        self.wal.append(op, arr)           # torn-write kills land inside
-        self._op_event("post-append")      # kill here: op durable, unapplied
-        out = self._apply(op, arr)         # mid-merge kills land inside
-        self._op_event("post-apply")       # kill here: op durable + applied
-        self.ops_total += 1
-        return out
+        with _obs_trace.span("durable.commit", op=op, seq=self.ops_total):
+            self._op_event("pre-append")   # kill here: op lost, state clean
+            self.wal.append(op, arr)       # torn-write kills land inside
+            self._op_event("post-append")  # kill here: op durable, unapplied
+            out = self._apply(op, arr)     # mid-merge kills land inside
+            self._op_event("post-apply")   # kill here: op durable + applied
+            self.ops_total += 1
+            return out
 
     def _apply(self, op: str, arr):
         if op == "insert":
@@ -342,18 +344,20 @@ class DurableIndex:
         """
         self.drain_queue()
         g = self.generation + 1
-        save_index(
-            self.index, self.root / f"snap_{g}",
-            extra_meta={
-                "durable": {"generation": g, "ops_total": self.ops_total}
-            },
-        )
-        new_wal = WriteAheadLog(self.root / f"wal_{g}.log", sync=self.sync)
-        new_wal.fault_plan = self.fault_plan
-        old = self.wal
-        self.wal, self.generation = new_wal, g
-        old.close()
-        self._gc()
+        with _obs_trace.span("durable.checkpoint", generation=g,
+                             ops_total=self.ops_total):
+            save_index(
+                self.index, self.root / f"snap_{g}",
+                extra_meta={
+                    "durable": {"generation": g, "ops_total": self.ops_total}
+                },
+            )
+            new_wal = WriteAheadLog(self.root / f"wal_{g}.log", sync=self.sync)
+            new_wal.fault_plan = self.fault_plan
+            old = self.wal
+            self.wal, self.generation = new_wal, g
+            old.close()
+            self._gc()
         return g
 
     def _gc(self) -> None:

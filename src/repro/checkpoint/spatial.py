@@ -32,6 +32,8 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.obs import trace as _obs_trace
+
 FORMAT_VERSION = 1
 
 _SCHED_KEYS = (
@@ -132,19 +134,20 @@ def save_index(idx, path, *, extra_meta: Optional[dict] = None) -> None:
     DurableIndex stores its op counter and generation there).
     """
     path = pathlib.Path(path)
-    path.parent.mkdir(parents=True, exist_ok=True)
-    meta, arrays = index_state(idx)
-    if extra_meta:
-        meta.update(extra_meta)
-    tmp = path.parent / f"{path.name}.tmp-{os.getpid()}"
-    if tmp.exists():
-        shutil.rmtree(tmp)
-    tmp.mkdir(parents=True)
-    write_state(tmp, meta, arrays)
-    if path.exists():
-        shutil.rmtree(path)
-    os.replace(tmp, path)
-    _fsync_dir(path.parent)
+    with _obs_trace.span("checkpoint.save", path=str(path)):
+        path.parent.mkdir(parents=True, exist_ok=True)
+        meta, arrays = index_state(idx)
+        if extra_meta:
+            meta.update(extra_meta)
+        tmp = path.parent / f"{path.name}.tmp-{os.getpid()}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        write_state(tmp, meta, arrays)
+        if path.exists():
+            shutil.rmtree(path)
+        os.replace(tmp, path)
+        _fsync_dir(path.parent)
 
 
 def read_state(path) -> Tuple[dict, dict]:
@@ -222,8 +225,10 @@ def restore_index(meta: dict, arrays: dict, *, backend: str,
 
 def load_index(path, *, backend: str = "pallas", **backend_opts):
     """Load a snapshot written by :func:`save_index` onto any backend."""
-    meta, arrays = read_state(path)
-    return restore_index(meta, arrays, backend=backend, **backend_opts)
+    with _obs_trace.span("checkpoint.load", path=str(path),
+                         backend=backend):
+        meta, arrays = read_state(path)
+        return restore_index(meta, arrays, backend=backend, **backend_opts)
 
 
 def snapshot_meta(path) -> Optional[dict]:

@@ -46,6 +46,8 @@ import numpy as np
 
 from repro.core import bulk, mqrtree, rtree
 from repro.core.flat import FlatTree, LevelSchedule, flatten, level_schedule, pyramid_schedule
+from repro.obs import counters as _obs_counters
+from repro.obs import trace as _obs_trace
 
 from . import knn as _knn
 from .registry import BackendSpec, get_backend
@@ -130,11 +132,17 @@ class RegionResult:
                       are the delta buffer's flat-scan accesses.
     base_levels:      levels belonging to the frozen base build; None for
                       an index with no live-update state.
+    launch_report:    merged :class:`repro.obs.LaunchReport` byte/tile
+                      ledger for this batch's kernel launches — populated
+                      only while ``repro.obs.collect_launch_reports(True)``
+                      is armed and the backend path runs eagerly
+                      (DESIGN.md §13); None otherwise.
     """
 
     hits: np.ndarray
     visits_per_level: np.ndarray
     base_levels: Optional[int] = None
+    launch_report: Optional[object] = None
 
     @property
     def visits(self) -> np.ndarray:
@@ -207,6 +215,13 @@ class AccessStats:
     # serving-front-end ledger (DESIGN.md §11)
     shed_queries: int = 0      # requests dropped by SLO admission control
     queued_queries: int = 0    # requests parked past max_queue (best-effort)
+    # kernel byte/tile ledger (DESIGN.md §13); accumulates only while
+    # repro.obs.collect_launch_reports(True) is armed
+    bytes_streamed: float = 0.0   # mbr+parent tile HBM traffic
+    mask_bytes: float = 0.0       # streamed-sweep survivor-window traffic
+    tiles_fetched: int = 0
+    tiles_skipped: int = 0        # dead-window DMA skips (streamed sweep)
+    launch_reports: int = 0       # batches with a ledger attached
 
     def record(self, n_queries: int, accesses: int, launches: int) -> None:
         self.queries += int(n_queries)
@@ -228,6 +243,40 @@ class AccessStats:
                 self.rung_dispatches[rung] = (
                     self.rung_dispatches.get(rung, 0) + int(n)
                 )
+
+    def absorb_launch_report(self, report) -> None:
+        """Fold one merged :class:`repro.obs.LaunchReport` into the
+        ledger (DESIGN.md §13)."""
+        if report is None:
+            return
+        self.bytes_streamed += float(report.bytes_streamed)
+        self.mask_bytes += float(report.mask_bytes)
+        self.tiles_fetched += int(report.tiles_fetched)
+        self.tiles_skipped += int(report.tiles_skipped)
+        self.launch_reports += 1
+
+    def to_dict(self) -> dict:
+        """Flat snapshot of every counter (``rung_dispatches`` stays a
+        nested dict) — the canonical form for metrics export and for
+        windowed deltas via :meth:`diff`."""
+        out = dataclasses.asdict(self)
+        out["rung_dispatches"] = dict(self.rung_dispatches)
+        return out
+
+    def diff(self, prev) -> dict:
+        """Counter deltas since ``prev`` (an :class:`AccessStats` or a
+        previous :meth:`to_dict` snapshot) — per-window accounting
+        instead of lifetime totals.  Zero rung entries are dropped."""
+        prev_d = prev.to_dict() if isinstance(prev, AccessStats) else dict(prev)
+        out = {}
+        for k, v in self.to_dict().items():
+            if isinstance(v, dict):
+                pv = prev_d.get(k) or {}
+                d = {r: n - pv.get(r, 0) for r, n in v.items()}
+                out[k] = {r: n for r, n in d.items() if n}
+            else:
+                out[k] = v - prev_d.get(k, 0)
+        return out
 
     @property
     def degraded(self) -> bool:
@@ -705,36 +754,38 @@ class SpatialIndex:
         n = new_mbrs.shape[0]
         if n == 0:  # no-op: leave pristine state and epochs untouched
             return np.zeros((0,), np.int64)
-        log = self._ensure_log()
-        if n > log.capacity:
-            # Oversized batch: never bufferable, folds straight into one
-            # merge — the documented bulk path, regardless of admission.
-            gids = log.merge_insert(new_mbrs)
-            self.stats.flushes += 1
-        elif not log.can_buffer(n):
-            # Full buffer (free slots / id headroom exhausted): admission
-            # control decides (DESIGN.md §9).
-            if self._admission == "shed":
-                self.stats.shed_mutations += n
-                return np.zeros((0,), np.int64)
-            if not log.policy.auto:
-                from repro.update import BufferFullError
-
-                raise BufferFullError(
-                    f"delta buffer cannot absorb {n} insert(s) "
-                    f"(fill {log.fill:.0%}) and the merge policy has "
-                    f"auto=False; call flush() or enable auto merging"
-                )
-            gids = log.merge_insert(new_mbrs)
-            self.stats.flushes += 1
-        else:
-            gids = log.buffer_insert(new_mbrs)
-            if log.policy.should_flush(
-                fill=log.fill, tombstone_ratio=log.tombstone_ratio
-            ):
-                log.flush()
+        with _obs_trace.span("index.insert", n=n):
+            log = self._ensure_log()
+            if n > log.capacity:
+                # Oversized batch: never bufferable, folds straight into
+                # one merge — the documented bulk path, regardless of
+                # admission.
+                gids = log.merge_insert(new_mbrs)
                 self.stats.flushes += 1
-        self.stats.inserts += n
+            elif not log.can_buffer(n):
+                # Full buffer (free slots / id headroom exhausted):
+                # admission control decides (DESIGN.md §9).
+                if self._admission == "shed":
+                    self.stats.shed_mutations += n
+                    return np.zeros((0,), np.int64)
+                if not log.policy.auto:
+                    from repro.update import BufferFullError
+
+                    raise BufferFullError(
+                        f"delta buffer cannot absorb {n} insert(s) "
+                        f"(fill {log.fill:.0%}) and the merge policy has "
+                        f"auto=False; call flush() or enable auto merging"
+                    )
+                gids = log.merge_insert(new_mbrs)
+                self.stats.flushes += 1
+            else:
+                gids = log.buffer_insert(new_mbrs)
+                if log.policy.should_flush(
+                    fill=log.fill, tombstone_ratio=log.tombstone_ratio
+                ):
+                    log.flush()
+                    self.stats.flushes += 1
+            self.stats.inserts += n
         return gids
 
     def delete(self, ids) -> None:
@@ -747,17 +798,18 @@ class SpatialIndex:
         ids = np.asarray(ids, np.int64).reshape(-1)
         if ids.size == 0:  # no-op: leave pristine state and epochs untouched
             return
-        log = self._ensure_log()
-        gids = log.delete(ids)
-        self.stats.deletes += int(gids.shape[0])
-        if (
-            log.n_live > 0
-            and log.policy.should_flush(
-                fill=log.fill, tombstone_ratio=log.tombstone_ratio
-            )
-        ):
-            log.flush()
-            self.stats.flushes += 1
+        with _obs_trace.span("index.delete", n=ids.size):
+            log = self._ensure_log()
+            gids = log.delete(ids)
+            self.stats.deletes += int(gids.shape[0])
+            if (
+                log.n_live > 0
+                and log.policy.should_flush(
+                    fill=log.fill, tombstone_ratio=log.tombstone_ratio
+                )
+            ):
+                log.flush()
+                self.stats.flushes += 1
 
     def flush(self) -> bool:
         """Manually merge buffer + tombstones into a fresh base build.
@@ -767,9 +819,10 @@ class SpatialIndex:
         """
         if self._updates is None:
             return False
-        if self._updates.flush():
-            self.stats.flushes += 1
-            return True
+        with _obs_trace.span("index.flush"):
+            if self._updates.flush():
+                self.stats.flushes += 1
+                return True
         return False
 
     def live_metrics(self):
@@ -781,6 +834,18 @@ class SpatialIndex:
         from repro.update.oracle import live_tree
 
         return _metrics.compute_metrics(live_tree(self))
+
+    # -- observability (DESIGN.md §13) ---------------------------------
+    def metrics(self, *, tenant: Optional[str] = None):
+        """Snapshot :attr:`stats` into a :class:`repro.obs.MetricsRegistry`
+        (render with ``.to_prometheus()`` or ``.to_json()``); ``tenant``
+        adds a label to every sample."""
+        from repro.obs import metrics as _obs_metrics
+
+        reg = _obs_metrics.MetricsRegistry()
+        labels = {"tenant": tenant} if tenant else None
+        _obs_metrics.stats_into(reg, self.stats, labels=labels)
+        return reg
 
     # -- durability (DESIGN.md §9) -------------------------------------
     def save(self, path) -> None:
@@ -824,15 +889,36 @@ class SpatialIndex:
         self._drain_health(live)
         return hits, visits, launches, self._updates.base.schedule.levels
 
+    def _drain_launch_report(self, visits=None):
+        """Drain + merge the kernel side channel for one logical batch;
+        fills survivor counts from the sweep's own visits when the
+        emitting path didn't compute them (DESIGN.md §13)."""
+        if not _obs_counters.collecting():
+            return None
+        report = _obs_counters.merge_reports(_obs_counters.drain())
+        if report is not None:
+            if report.survivors_per_level is None and visits is not None:
+                report.survivors_per_level = tuple(
+                    int(x) for x in np.asarray(visits).sum(axis=0)
+                )
+            if report.backend is None:
+                report.backend = self.spec.name
+            self.stats.absorb_launch_report(report)
+        return report
+
     def region(self, queries) -> RegionResult:
         """Batched region search over (Q, 4) query rectangles."""
         queries = np.asarray(queries, np.float32).reshape(-1, 4)
-        hits, visits, launches, base_levels = self._region_raw(queries)
+        with _obs_trace.span("index.region", backend=self.spec.name,
+                             structure=self.structure,
+                             queries=queries.shape[0]):
+            hits, visits, launches, base_levels = self._region_raw(queries)
         self.stats.record(queries.shape[0], visits.sum(), launches)
         if base_levels is not None:
             self.stats.delta_accesses += int(visits[:, base_levels:].sum())
         return RegionResult(
-            hits=hits, visits_per_level=visits, base_levels=base_levels
+            hits=hits, visits_per_level=visits, base_levels=base_levels,
+            launch_report=self._drain_launch_report(visits),
         )
 
     def point(self, points) -> RegionResult:
@@ -864,7 +950,10 @@ class SpatialIndex:
         """
         from .join import join_impl
 
-        result, launches = join_impl(self, other, predicate)
+        with _obs_trace.span("index.join", backend=self.spec.name,
+                             other_backend=other.spec.name,
+                             predicate=predicate):
+            result, launches = join_impl(self, other, predicate)
         self.stats.joins += 1
         self.stats.record(1, result.pair_visits.sum(), launches)
         self.stats.delta_accesses += int(result.delta_tests.sum())
@@ -883,38 +972,47 @@ class SpatialIndex:
         if not 1 <= k <= self.n_objects:
             raise ValueError(f"k={k} outside [1, {self.n_objects}]")
         live = self._updates
-        if self.spec.name == "host":
-            if live is not None:
-                # Under mutation the base pointer tree is stale; the host
-                # oracle answers exactly from the live id-space table.
-                ids, dists, visits = _knn.knn_brute_masked(
-                    live.mbr_table, live.alive, points, k
-                )
-            elif self.artifacts.pointer_tree is not None:
-                ids, dists, visits = _knn.knn_pointer(
-                    self.artifacts.pointer_tree, points, k
-                )
-            else:
-                ids, dists, visits = _knn.knn_brute(self.artifacts.mbrs, points, k)
-            self.stats.knn_queries += points.shape[0]
-            self.stats.record(points.shape[0], visits.sum(), 0)
-        else:
-            def region_fn(qs):
-                hits, visits, launches, base_levels = self._region_raw(qs)
-                self.stats.record(0, visits.sum(), launches)
-                if base_levels is not None:
-                    self.stats.delta_accesses += int(
-                        visits[:, base_levels:].sum()
+        with _obs_trace.span("index.knn", backend=self.spec.name, k=k,
+                             queries=points.shape[0]):
+            if self.spec.name == "host":
+                if live is not None:
+                    # Under mutation the base pointer tree is stale; the
+                    # host oracle answers exactly from the live id-space
+                    # table.
+                    ids, dists, visits = _knn.knn_brute_masked(
+                        live.mbr_table, live.alive, points, k
                     )
-                return hits, visits
+                elif self.artifacts.pointer_tree is not None:
+                    ids, dists, visits = _knn.knn_pointer(
+                        self.artifacts.pointer_tree, points, k
+                    )
+                else:
+                    ids, dists, visits = _knn.knn_brute(
+                        self.artifacts.mbrs, points, k
+                    )
+                self.stats.knn_queries += points.shape[0]
+                self.stats.record(points.shape[0], visits.sum(), 0)
+            else:
+                def region_fn(qs):
+                    hits, visits, launches, base_levels = self._region_raw(qs)
+                    self.stats.record(0, visits.sum(), launches)
+                    if base_levels is not None:
+                        self.stats.delta_accesses += int(
+                            visits[:, base_levels:].sum()
+                        )
+                    return hits, visits
 
-            # Live indexes rank candidates over the id-space MBR table
-            # (hits already exclude tombstones, so stale rows never rank).
-            obj_mbrs = live.mbr_table if live is not None else self.artifacts.mbrs
-            ids, dists, visits, rounds = _knn.knn_expanding(
-                region_fn, obj_mbrs, points, k
-            )
-            self.stats.knn_queries += points.shape[0]
-            self.stats.knn_rounds += rounds
-            self.stats.queries += points.shape[0]
+                # Live indexes rank candidates over the id-space MBR table
+                # (hits already exclude tombstones, so stale rows never
+                # rank).
+                obj_mbrs = (live.mbr_table if live is not None
+                            else self.artifacts.mbrs)
+                ids, dists, visits, rounds = _knn.knn_expanding(
+                    region_fn, obj_mbrs, points, k
+                )
+                self.stats.knn_queries += points.shape[0]
+                self.stats.knn_rounds += rounds
+                self.stats.queries += points.shape[0]
+                # fold every expanding-radius round's kernel ledger
+                self._drain_launch_report()
         return KNNResult(ids=ids, dists=dists, visits=visits)

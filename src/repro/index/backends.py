@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from repro.core import mbr as M
 from repro.core.flat import LevelSchedule
 from repro.kernels import ops
+from repro.obs import counters as _obs_counters
+from repro.obs import trace as _obs_trace
 
 from .registry import register_backend
 from .trees import node_children, node_mbr, tree_height
@@ -68,6 +70,10 @@ class HostBackend:
             self.levels = self.schedule.levels
 
     def region(self, queries: np.ndarray):
+        with _obs_trace.span("backend.host", queries=queries.shape[0]):
+            return self._region(queries)
+
+    def _region(self, queries: np.ndarray):
         if self.tree is None:
             hits, visits = schedule_region_numpy(self.schedule, queries)
             return hits, visits, 0
@@ -143,8 +149,9 @@ class LaxBackend:
         self._run = _make_lax_sweep(sched)
 
     def region(self, queries: np.ndarray):
-        hits, visits = self._run(jnp.asarray(queries, jnp.float32))
-        return np.asarray(hits), np.asarray(visits), 1
+        with _obs_trace.span("backend.lax", queries=queries.shape[0]):
+            hits, visits = self._run(jnp.asarray(queries, jnp.float32))
+            return np.asarray(hits), np.asarray(visits), 1
 
 
 def _make_lax_sweep(schedule: LevelSchedule):
@@ -337,9 +344,28 @@ class PallasBackend:
 
     def region(self, queries: np.ndarray):
         queries = np.asarray(queries, np.float32)
-        cfg = self._config(queries)
-        hits, visits, launches = self._run(queries, cfg)
-        return np.asarray(hits), np.asarray(visits), launches
+        with _obs_trace.span("backend.pallas", queries=queries.shape[0],
+                             precision=self.precision, stream=self.stream):
+            cfg = self._config(queries)
+            if _obs_counters.collecting():
+                _obs_counters.drain()  # discard autotune-probe emissions
+            hits, visits, launches = self._run(queries, cfg)
+            hits, visits = np.asarray(hits), np.asarray(visits)
+        if _obs_counters.collecting():
+            # The query_block chunking above emits one report per chunk;
+            # re-emit them merged, stamped with the tiling actually used
+            # (the façade drains this into RegionResult.launch_report).
+            report = _obs_counters.merge_reports(_obs_counters.drain())
+            if report is not None:
+                report.query_block = cfg.query_block
+                report.block_w = cfg.block_w
+                report.backend = "pallas"
+                if report.survivors_per_level is None:
+                    report.survivors_per_level = tuple(
+                        int(x) for x in visits.sum(axis=0)
+                    )
+                _obs_counters.emit(report)
+        return hits, visits, launches
 
 
 # ---------------------------------------------------------------------------
@@ -386,9 +412,10 @@ class ServeBackend:
         )
 
     def region(self, queries: np.ndarray):
-        before = self.server.stats.kernel_launches
-        hits, visits = self.server.search(queries)
-        return hits, visits, self.server.stats.kernel_launches - before
+        with _obs_trace.span("backend.serve", queries=queries.shape[0]):
+            before = self.server.stats.kernel_launches
+            hits, visits = self.server.search(queries)
+            return hits, visits, self.server.stats.kernel_launches - before
 
     def bind_fault_plan(self, plan) -> None:
         self.server.bind_fault_plan(plan)

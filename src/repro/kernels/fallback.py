@@ -32,6 +32,8 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.obs import counters as _obs_counters
+
 
 def _overlap(a, b):
     """Closed-boundary rectangle intersection, broadcasting; index/compare
@@ -206,6 +208,11 @@ def _twin_search(xp, queries, qeff, mbr_cm, parent, obj_level, obj_slot,
     ``qeff`` is what the sweep tests (float32 queries, or their outward
     integer quantization on the compact rungs); ``queries`` stays float32
     for the exact confirming gate."""
+    if xp is np and _obs_counters.collecting():
+        # the lax twins run jit/vmap-traced, where a host side channel
+        # cannot exist — only the eager numpy rung reports launches
+        _obs_counters.emit(_obs_counters.host_twin_report(
+            queries, mbr_cm, parent, stream=stream))
     if stream:
         hit, visits = _stream_entry_sweep(
             xp, qeff, mbr_cm, parent,

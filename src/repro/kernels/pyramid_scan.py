@@ -55,6 +55,7 @@ from repro.core.flat import (
     QuantizedSchedule,
     _overlaps,
 )
+from repro.obs import counters as _obs_counters
 
 
 def _overlap_tile(q_ref, mbr_tile):
@@ -730,6 +731,11 @@ def pyramid_scan(
         win_off, win_w = parent_windows(
             schedule.parent, schedule.n_real, block_w=block_w
         )
+    if _obs_counters.collecting():  # side channel: eager wrappers only
+        _obs_counters.emit(_obs_counters.scan_report_float32(
+            schedule, queries, block_w=block_w, stream=stream,
+            win_off=win_off, win_w=win_w))
+    if stream:
         win_off = jnp.asarray(win_off)
     return _fused_search(
         jnp.asarray(queries, jnp.float32),
@@ -813,6 +819,11 @@ def pyramid_scan_compact(
         win_off, win_w = parent_windows(
             qsched.parent_q, qsched.base.n_real, block_w=block_w
         )
+    if _obs_counters.collecting():  # side channel: eager wrappers only
+        _obs_counters.emit(_obs_counters.scan_report_compact(
+            qsched, queries, block_w=block_w, stream=stream,
+            win_off=win_off, win_w=win_w))
+    if stream:
         win_off = jnp.asarray(win_off)
     return _fused_search_compact(
         jnp.asarray(queries, jnp.float32),
@@ -900,6 +911,9 @@ def pyramid_scan_compact8(
         raise ValueError(
             "pyramid_scan_compact8 needs quantize_schedule(..., upper8=True)"
         )
+    if _obs_counters.collecting():  # side channel: eager wrappers only
+        _obs_counters.emit(_obs_counters.scan_report_compact8(
+            qsched, queries, block_w=block_w))
     split = qsched.split
     return _fused_search_compact8(
         jnp.asarray(queries, jnp.float32),

@@ -20,6 +20,8 @@ import sys
 
 import numpy as np
 
+from repro.obs import counters as obs_counters
+from repro.obs import trace as obs_trace
 from repro.serve import ServerConfig, ServingFrontEnd
 from repro.serve.loadgen import run_sweep, write_bench_rows
 
@@ -33,7 +35,13 @@ def demo_dataset(n: int, *, seed: int = 7) -> np.ndarray:
     return np.concatenate([c, c + wh], axis=1)
 
 
-def build_sweep(args):
+def build_sweep(args, last_front=None):
+    """``make_front`` factory for :func:`run_sweep`.
+
+    ``last_front`` is an optional one-element list: run_sweep builds a
+    FRESH front per QPS level, so the cell captures whichever front ran
+    last — the one ``--metrics-out`` snapshots after the sweep.
+    """
     data = {"demo": demo_dataset(args.n)}
     cfg = ServerConfig.from_dict({
         "tenants": [{
@@ -49,7 +57,10 @@ def build_sweep(args):
     })
 
     def make_front():
-        return ServingFrontEnd.build(cfg, data), "demo"
+        front = ServingFrontEnd.build(cfg, data)
+        if last_front is not None:
+            last_front[0] = front
+        return front, "demo"
 
     return make_front
 
@@ -69,11 +80,23 @@ def main(argv=None) -> int:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--write-bench", action="store_true",
                    help="merge rows into BENCH_<date>.json at the repo root")
+    p.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="record spans and export a Chrome/Perfetto "
+                        "trace.json of the sweep")
+    p.add_argument("--metrics-out", default=None, metavar="PATH",
+                   help="write the last front's Prometheus metrics "
+                        "snapshot (PATH and PATH + '.json')")
     args = p.parse_args(argv)
 
+    if args.trace_out:
+        obs_trace.enable()
+        obs_counters.collect_launch_reports(True)
+
     levels = [float(x) for x in args.qps.split(",")]
-    rows = run_sweep(build_sweep(args), levels, duration=args.duration,
-                     seed=args.seed, knn_every=args.knn_every)
+    last_front = [None]
+    rows = run_sweep(build_sweep(args, last_front), levels,
+                     duration=args.duration, seed=args.seed,
+                     knn_every=args.knn_every)
 
     print("qps_offered,qps_achieved,p50_ms,p99_ms,p999_ms,shed,"
           "slo_violations,avg_batch")
@@ -82,6 +105,18 @@ def main(argv=None) -> int:
               f"{row['p50_ms']:.3f},{row['p99_ms']:.3f},"
               f"{row['p999_ms']:.3f},{row['shed']},"
               f"{row['slo_violations']},{row['avg_batch']}")
+
+    if args.trace_out:
+        obs_trace.get_tracer().export_chrome_trace(args.trace_out)
+        obs_counters.collect_launch_reports(False)
+        obs_trace.disable()
+        print(f"# wrote {args.trace_out}", file=sys.stderr)
+    if args.metrics_out and last_front[0] is not None:
+        reg = last_front[0].metrics()
+        with open(args.metrics_out, "w") as f:
+            f.write(reg.to_prometheus())
+        reg.write_json(args.metrics_out + ".json")
+        print(f"# wrote {args.metrics_out} (+.json)", file=sys.stderr)
 
     if args.write_bench:
         root = os.path.dirname(

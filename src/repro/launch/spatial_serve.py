@@ -43,6 +43,7 @@ import jax.numpy as jnp
 
 from repro.core.flat import NEVER_MBR, LevelSchedule
 from repro.kernels import fallback, ops
+from repro.obs import trace as _obs_trace
 
 LADDER = ("pallas", "lax", "host")
 
@@ -423,12 +424,18 @@ class SpatialServer:
             rung = self.ladder[ri]
             for attempt in range(self.max_retries + 1):
                 try:
-                    if self.fault_plan is not None:
-                        self.fault_plan.launch(rung)
-                    out = self._dispatch_rung(rung, blocks)
+                    with _obs_trace.span("serve.rung", rung=rung,
+                                         attempt=attempt,
+                                         blocks=blocks.shape[0]):
+                        if self.fault_plan is not None:
+                            self.fault_plan.launch(rung)
+                        out = self._dispatch_rung(rung, blocks)
                 except Exception as exc:
                     last_exc = exc
                     self.stats.rung_failures[rung] += 1
+                    _obs_trace.instant("serve.rung_failure", rung=rung,
+                                       attempt=attempt,
+                                       error=type(exc).__name__)
                     if attempt < self.max_retries:
                         self.stats.retries += 1
                         if self.backoff > 0:
@@ -444,6 +451,11 @@ class SpatialServer:
             # floor) so subsequent batches skip the broken rung.
             if ri + 1 < len(self.ladder):
                 self._rung_floor = max(self._rung_floor, ri + 1)
+                _obs_trace.instant(
+                    "serve.degrade",
+                    **{"from": rung, "to": self.ladder[ri + 1],
+                       "failures": self.max_retries + 1},
+                )
                 warnings.warn(
                     f"SpatialServer: rung {rung!r} failed "
                     f"{self.max_retries + 1}x ({last_exc!r}); degrading to "

@@ -1,0 +1,349 @@
+"""Per-launch kernel counter ledger (DESIGN.md §13).
+
+The paper states its headline results in *accesses*; PR 9's streaming
+bench (`benchmarks/jax_bench.py::bench_stream_scan`) turned those into a
+byte-exact HBM-traffic ledger — but only the bench could see it.  This
+module is the single home of that accounting so bench and production
+disclose **identical** numbers:
+
+* :func:`survivor_recurrence`, :func:`tile_bytes_per_query`,
+  :func:`stream_fetch_bytes`, :func:`quantize_queries_grid` — the ledger
+  math, moved here verbatim from the bench (which now imports them).
+* :class:`LaunchReport` — the structured per-launch record (bytes
+  streamed, tiles fetched/skipped, mask traffic, survivors per level,
+  tiling used), built by the eager ``pyramid_scan*`` wrappers and the
+  host fallback twins through a side channel, drained by the façade into
+  ``RegionResult.launch_report`` and folded into ``AccessStats``.
+
+The side channel is opt-in (:func:`collect_launch_reports`): the ledger
+replays the survivor recurrence on the host (O(L·Q·W) numpy), which is
+fine for forensics and tests but not for the hot path, so the default is
+a single module-flag check costing nothing.  Only eagerly-executed
+launch paths can emit — the lax twins and the serve backend's vmapped
+inner functions run traced, where a host side channel cannot exist.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# the ledger math (single source of truth; benchmarks import these)
+# ---------------------------------------------------------------------------
+
+def survivor_recurrence(mbr_grid, parent, qq_per_level, *,
+                        root_unconditional=True):
+    """Yield ``(l, tested, act)`` of the quantized sweep's own recurrence.
+
+    ``mbr_grid`` is the integer (L, 4, W) grid the sweep actually tests,
+    ``qq_per_level(l)`` the matching outward-quantized queries for level
+    ``l`` — so survivors here are the kernel's own, conservative widening
+    included.
+    """
+    levels, _, w = mbr_grid.shape
+    prev = None
+    for l in range(levels):
+        qq = qq_per_level(l)
+        rm = mbr_grid[l].T[None, :, :]  # (1, W, 4)
+        ov = (
+            (rm[..., 0] <= qq[:, None, 2]) & (qq[:, None, 0] <= rm[..., 2])
+            & (rm[..., 1] <= qq[:, None, 3]) & (qq[:, None, 1] <= rm[..., 3])
+        )
+        if l == 0:
+            tested = np.ones((qq.shape[0], w), bool)
+            if root_unconditional:
+                # the kernel's root mask is slot 0 only (_act_formula)
+                act = np.zeros_like(ov)
+                act[:, 0] = True
+            else:
+                act = ov
+        else:
+            tested = prev[:, parent[l]]
+            act = tested & ov
+        yield l, tested, act
+        prev = act
+
+
+def tile_bytes_per_query(mbr_grid, parent, n_real, qq, *, split,
+                         levels8_bytes=384, levels16_bytes=640, tile=64,
+                         root_unconditional=True, qq8=None):
+    """Visited-tile HBM traffic of one quantized sweep, per query.
+
+    The fetch model is the paper's disk-access ledger at tile grain: a
+    64-slot tile is fetched at level ``l`` when any of its *real* slots
+    (``n_real[l]`` — padding slots alias parent 0 and must not count)
+    must be tested, i.e. its parent survived level ``l-1``; every tile at
+    the root.  A uint16 tile costs 64·4·2 B of MBR lanes + 64·2 B of
+    parent row = 640 B; a uint8 upper tile (levels < split) 64·4·1 +
+    64·2 = 384 B, tested against the coarse-grid queries ``qq8``.
+    """
+    n_q = qq.shape[0]
+    total = 0.0
+    sweep = survivor_recurrence(
+        mbr_grid, parent, lambda l: qq8 if l < split else qq,
+        root_unconditional=root_unconditional,
+    )
+    for l, tested, _ in sweep:
+        nr = int(n_real[l])
+        tr = tested[:, :nr]
+        pad = (-nr) % tile
+        fetched = np.pad(tr, ((0, 0), (0, pad))).reshape(
+            n_q, -1, tile).any(axis=2).sum()
+        total += float(fetched) * (levels8_bytes if l < split
+                                   else levels16_bytes)
+    return total / n_q
+
+
+def stream_fetch_bytes(mbr_grid, parent, qq, win_off, win_w, *,
+                       block_w=128, slot_bytes=10,
+                       root_unconditional=True):
+    """Per-launch HBM tile traffic of the dead-window-skip streamed sweep.
+
+    Mirrors ``_stream_sweep_kernel``'s fetch rule exactly: the
+    (block_w)-slot tile at (l, t) is DMA'd iff it is not statically
+    empty (``win_off[l, t] == -1`` marks tiles wholly past ``n_real``)
+    AND (``l == 0``, or ``t == 0`` — a level boundary's window cannot be
+    read a step early — or the parent window ``[win_off[l, t], +win_w)``
+    holds a survivor for ANY query in the batch).  Returns
+    ``(tile_bytes, mask_bytes, fetched, total_tiles, survivors)`` where
+    ``mask_bytes`` is the survivor-window traffic (window reads for
+    non-empty gated tiles + write-back of every tile) that the streaming
+    design pays for unbounded capacity, and ``survivors`` the per-level
+    active-slot totals of the recurrence (summed over the query batch).
+    """
+    levels, _, w = mbr_grid.shape
+    n_q = qq.shape[0]
+    wp = ((w + block_w - 1) // block_w) * block_w
+    n_tiles = wp // block_w
+    fetched, windows, prev = 0, 0, None
+    survivors: List[int] = []
+    for l, _, act in survivor_recurrence(
+            mbr_grid, parent, lambda l: qq,
+            root_unconditional=root_unconditional):
+        survivors.append(int(act.sum()))
+        for t in range(n_tiles):
+            off = int(win_off[l, t])
+            if off < 0:
+                continue  # statically empty: never DMA'd
+            if l > 0:
+                windows += 1
+            if l == 0 or t == 0:
+                fetched += 1
+                continue
+            pv = np.pad(prev, ((0, 0), (0, wp - w)))
+            alive = pv.any(axis=0)  # batch union: one DMA serves all q
+            if alive[off:off + win_w].any():
+                fetched += 1
+        prev = act
+    total_tiles = levels * n_tiles
+    mask_bytes = (windows * n_q * win_w * 4          # window reads
+                  + total_tiles * n_q * block_w * 4)  # mask write-back
+    return (float(fetched * block_w * slot_bytes), float(mask_bytes),
+            fetched, total_tiles, tuple(survivors))
+
+
+def quantize_queries_grid(queries, origin, inv_cell, cells):
+    """Outward-quantize float queries onto an integer grid — exactly the
+    transform the compact kernels apply (floor lo, ceil hi, clip)."""
+    queries = np.asarray(queries)
+    origin = np.asarray(origin)
+    inv_cell = np.asarray(inv_cell)
+    t = (queries - origin[None, :]) * inv_cell[None, :]
+    qq = np.concatenate([np.floor(t[:, :2]), np.ceil(t[:, 2:])], axis=1)
+    return np.clip(qq, 0.0, float(cells)).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# LaunchReport + side channel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LaunchReport:
+    """One fused-sweep launch, in the same units the §12 bench discloses.
+
+    ``bytes_streamed`` is mbr+parent tile traffic for the whole query
+    batch (divide by ``queries`` for the bench's bytes/query rows);
+    ``mask_bytes`` the survivor-window side traffic of the streamed
+    kernel; ``survivors_per_level`` the kernel's own per-level active
+    counts summed over the batch (== column sums of ``visits``).
+    """
+
+    kind: str                      # "float32" | "compact" | "compact8"
+    stream: bool
+    queries: int
+    block_w: int
+    bytes_streamed: float
+    mask_bytes: float = 0.0
+    tiles_fetched: int = 0
+    tiles_total: int = 0
+    survivors_per_level: Optional[Tuple[int, ...]] = None
+    query_block: Optional[int] = None
+    backend: Optional[str] = None
+    launches: int = 1
+
+    @property
+    def tiles_skipped(self) -> int:
+        return max(self.tiles_total - self.tiles_fetched, 0)
+
+    @property
+    def bytes_per_query(self) -> float:
+        return self.bytes_streamed / self.queries if self.queries else 0.0
+
+    def to_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["tiles_skipped"] = self.tiles_skipped
+        if self.survivors_per_level is not None:
+            d["survivors_per_level"] = list(self.survivors_per_level)
+        return d
+
+
+def merge_reports(reports) -> Optional[LaunchReport]:
+    """Fold the reports of one logical query batch (the pallas backend
+    chunks by ``query_block``, emitting one report per chunk)."""
+    reports = [r for r in reports if r is not None]
+    if not reports:
+        return None
+    out = dataclasses.replace(reports[0])
+    for r in reports[1:]:
+        out.queries += r.queries
+        out.launches += r.launches
+        out.bytes_streamed += r.bytes_streamed
+        out.mask_bytes += r.mask_bytes
+        out.tiles_fetched += r.tiles_fetched
+        out.tiles_total += r.tiles_total
+        if out.survivors_per_level is not None and \
+                r.survivors_per_level is not None:
+            out.survivors_per_level = tuple(
+                a + b for a, b in
+                zip(out.survivors_per_level, r.survivors_per_level))
+        elif r.survivors_per_level is not None:
+            out.survivors_per_level = r.survivors_per_level
+    return out
+
+
+_collecting = False
+_pending: List[LaunchReport] = []
+
+
+def collect_launch_reports(on: bool = True) -> None:
+    """Arm (or disarm) the side channel; drains any stale reports."""
+    global _collecting, _pending
+    _collecting = bool(on)
+    _pending = []
+
+
+def collecting() -> bool:
+    return _collecting
+
+
+def emit(report: LaunchReport) -> None:
+    _pending.append(report)
+
+
+def drain() -> List[LaunchReport]:
+    global _pending
+    out, _pending = _pending, []
+    return out
+
+
+# ---------------------------------------------------------------------------
+# report builders (called by the eager kernel wrappers when collecting)
+# ---------------------------------------------------------------------------
+
+def _grid_tiles(w: int, levels: int, block_w: int) -> Tuple[int, int]:
+    n_tiles = (int(w) + block_w - 1) // block_w
+    return levels * n_tiles, levels * n_tiles
+
+
+def scan_report_float32(schedule, queries, *, block_w, stream,
+                        win_off=None, win_w=None) -> LaunchReport:
+    mbr = np.asarray(schedule.mbr_cm)
+    parent = np.asarray(schedule.parent)
+    n_q = int(np.asarray(queries).shape[0])
+    slot_bytes = 4 * mbr.dtype.itemsize + parent.dtype.itemsize
+    if stream:
+        tile_b, mask_b, fetched, total, surv = stream_fetch_bytes(
+            mbr, parent, np.asarray(queries),
+            np.asarray(win_off), int(win_w), block_w=block_w,
+            slot_bytes=slot_bytes,
+            root_unconditional=schedule.root_unconditional,
+        )
+        return LaunchReport("float32", True, n_q, block_w, tile_b,
+                            mask_bytes=mask_b, tiles_fetched=fetched,
+                            tiles_total=total, survivors_per_level=surv)
+    # resident: pallas_call DMAs the full grid every launch
+    fetched, total = _grid_tiles(mbr.shape[2], mbr.shape[0], block_w)
+    return LaunchReport("float32", False, n_q, block_w,
+                        float(mbr.nbytes + parent.nbytes),
+                        tiles_fetched=fetched, tiles_total=total)
+
+
+def scan_report_compact(qsched, queries, *, block_w, stream,
+                        win_off=None, win_w=None) -> LaunchReport:
+    """uint16 compact sweep — the bench_stream_scan headline rows.
+
+    The streamed branch calls :func:`stream_fetch_bytes` on exactly the
+    inputs ``bench_stream_scan`` uses (int64 views of the same quantized
+    grid, the same outward query quantization, the same parent windows),
+    so ``bytes_streamed`` matches the "bytes-streamed-skip-uint16"
+    disclosure bit for bit; the resident branch reports the schedule's
+    own ``streamed_bytes`` (the "bytes-compact-uint16-resident" row).
+    """
+    n_q = int(np.asarray(queries).shape[0])
+    g = np.asarray(qsched.mbr_q, np.int64)
+    p = np.asarray(qsched.parent_q, np.int64)
+    if stream:
+        qq = quantize_queries_grid(queries, qsched.origin, qsched.inv_cell,
+                                   qsched.cells)
+        tile_b, mask_b, fetched, total, surv = stream_fetch_bytes(
+            g, p, qq, np.asarray(win_off), int(win_w), block_w=block_w,
+            root_unconditional=qsched.base.root_unconditional,
+        )
+        return LaunchReport("compact", True, n_q, block_w, tile_b,
+                            mask_bytes=mask_b, tiles_fetched=fetched,
+                            tiles_total=total, survivors_per_level=surv)
+    fetched, total = _grid_tiles(g.shape[2], g.shape[0], block_w)
+    return LaunchReport("compact", False, n_q, block_w,
+                        float(qsched.streamed_bytes),
+                        tiles_fetched=fetched, tiles_total=total)
+
+
+def scan_report_compact8(qsched, queries, *, block_w) -> LaunchReport:
+    """uint8-upper mixed-grid sweep: the paper-style visited-tile ledger
+    (the resident kernel has no dead-window skip, so the visited model is
+    the number this path discloses in bench_stream_scan)."""
+    n_q = int(np.asarray(queries).shape[0])
+    mixed = np.asarray(qsched.mbr_q, np.int64).copy()
+    if qsched.split:
+        mixed[:qsched.split] = np.asarray(qsched.mbr_q8, np.int64)
+    bpq = tile_bytes_per_query(
+        mixed, np.asarray(qsched.parent_q, np.int64),
+        np.asarray(qsched.base.n_real, np.int64),
+        quantize_queries_grid(queries, qsched.origin, qsched.inv_cell,
+                              qsched.cells),
+        split=qsched.split,
+        root_unconditional=qsched.base.root_unconditional,
+        qq8=quantize_queries_grid(queries, qsched.origin, qsched.inv_cell8,
+                                  qsched.cells8),
+    )
+    g = np.asarray(qsched.mbr_q)
+    fetched, total = _grid_tiles(g.shape[2], g.shape[0], block_w)
+    return LaunchReport("compact8", False, n_q, block_w, bpq * n_q,
+                        tiles_fetched=fetched, tiles_total=total)
+
+
+def host_twin_report(queries, mbr_cm, parent, *, stream) -> LaunchReport:
+    """The numpy degradation twins touch the full grid per sweep; the
+    streamed twin additionally walks it level-by-level but fetches the
+    same bytes — the ledger records grid traffic, not cache behaviour."""
+    mbr = np.asarray(mbr_cm)
+    par = np.asarray(parent)
+    n_q = int(np.asarray(queries).shape[0])
+    return LaunchReport("host-twin", bool(stream), n_q, mbr.shape[2],
+                        float(mbr.nbytes + par.nbytes),
+                        tiles_fetched=mbr.shape[0], tiles_total=mbr.shape[0],
+                        backend="host")

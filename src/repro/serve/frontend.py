@@ -34,6 +34,7 @@ import dataclasses
 import numpy as np
 
 from repro.index.api import InvalidQueryError, SpatialIndex, validate_queries
+from repro.obs import trace as _obs_trace
 
 from .config import ServerConfig, TenantConfig
 from .queue import KINDS, BatchQueue, GroupKey, Request, group_key
@@ -201,10 +202,17 @@ class ServingFrontEnd:
                 req.status = "shed"
                 self.telemetry.shed += 1
                 self.tenants[tenant].stats.shed_queries += 1
+                # span-less counter event: overload is visible in the
+                # trace export, not just in AccessStats (DESIGN.md §13)
+                _obs_trace.counter("serve.shed", shed=self.telemetry.shed)
                 return req
             req.parked = True    # overload="queue": best-effort, no SLO
             self.telemetry.queued_overload += 1
             self.tenants[tenant].stats.queued_queries += 1
+            _obs_trace.counter("serve.queued_overload",
+                               queued=self.telemetry.queued_overload)
+        _obs_trace.instant("serve.enqueue", tenant=tenant, kind=kind,
+                           slo=cls.name, seq=req.seq)
         self.queue.add(req)
         return req
 
@@ -252,23 +260,26 @@ class ServingFrontEnd:
         for req in batch:
             req.t_launch = t_launch
         rt = self.tenants[batch[0].tenant]
-        if key[0] == "rect":
-            rects = np.stack([r.payload for r in batch])
-            res = rt.index.region(rects)
-            for i, req in enumerate(batch):
-                if req.kind == "count":
-                    req.result = int(res.hits[i].sum())
-                else:
-                    req.result = Answer(
-                        hits=res.hits[i], visits=res.visits_per_level[i]
-                    )
-                self._complete(req)
-        else:
-            pts = np.stack([r.payload for r in batch])
-            res = rt.index.knn(pts, k=key[2])
-            for i, req in enumerate(batch):
-                req.result = (res.ids[i], res.dists[i])
-                self._complete(req)
+        with _obs_trace.span("serve.launch", tenant=batch[0].tenant,
+                             kind=key[0], batch=len(batch),
+                             by_deadline=by_deadline):
+            if key[0] == "rect":
+                rects = np.stack([r.payload for r in batch])
+                res = rt.index.region(rects)
+                for i, req in enumerate(batch):
+                    if req.kind == "count":
+                        req.result = int(res.hits[i].sum())
+                    else:
+                        req.result = Answer(
+                            hits=res.hits[i], visits=res.visits_per_level[i]
+                        )
+                    self._complete(req)
+            else:
+                pts = np.stack([r.payload for r in batch])
+                res = rt.index.knn(pts, k=key[2])
+                for i, req in enumerate(batch):
+                    req.result = (res.ids[i], res.dists[i])
+                    self._complete(req)
         done = self.clock()
         self.queue.observe_service(key, done - t_launch)
         self.telemetry.batches += 1
@@ -331,6 +342,21 @@ class ServingFrontEnd:
     def stats(self, tenant: str):
         """The tenant's :class:`repro.index.AccessStats` ledger."""
         return self._tenant(tenant).stats
+
+    def metrics(self):
+        """One :class:`repro.obs.MetricsRegistry` snapshot of the whole
+        front end: serve telemetry (latency/queue-wait summaries, per
+        SLO class and per tenant) plus every tenant's ``AccessStats``
+        under a ``tenant`` label (DESIGN.md §13).  Render with
+        ``.to_prometheus()`` or ``.to_json()``."""
+        from repro.obs import metrics as _obs_metrics
+
+        reg = _obs_metrics.MetricsRegistry()
+        _obs_metrics.telemetry_into(reg, self.telemetry)
+        for name, rt in sorted(self.tenants.items()):
+            _obs_metrics.stats_into(reg, rt.stats,
+                                    labels={"tenant": name})
+        return reg
 
     def warmup(self, *, knn_k: Optional[int] = None) -> None:
         """Compile every tenant's batched query path at the serving

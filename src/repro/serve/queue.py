@@ -29,6 +29,8 @@ from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import trace as _obs_trace
+
 #: request kinds the front end coalesces
 KINDS = ("region", "point", "count", "knn")
 
@@ -132,6 +134,9 @@ class BatchQueue:
                 continue
             slack = oldest.deadline - now - self.est_service(key)
             if slack <= self.slack_margin:
+                _obs_trace.instant("queue.deadline_due",
+                                   group=str(key), seq=oldest.seq,
+                                   slack_ms=slack * 1e3)
                 out.append((key, True))
         return out
 

@@ -57,10 +57,15 @@ class LatencyHistogram:
         self.counts[idx] += 1
 
     def quantile(self, q: float) -> float:
-        """The ``q``-quantile in seconds (0 when empty)."""
+        """The ``q``-quantile in seconds (0 when empty).  ``q`` is
+        clamped: ``q <= 0`` reads the lowest occupied bucket, ``q >= 1``
+        returns the exact observed maximum (the midpoint estimate of the
+        top bucket could otherwise exceed every recorded sample)."""
         if self.n == 0:
             return 0.0
-        rank = min(max(q, 0.0), 1.0) * (self.n - 1)
+        if q >= 1.0:
+            return self.max
+        rank = max(q, 0.0) * (self.n - 1)
         seen = 0
         for i, c in enumerate(self.counts):
             seen += c
@@ -70,6 +75,38 @@ class LatencyHistogram:
                 # geometric midpoint of bucket i: [lo*g^(i-1), lo*g^i)
                 return self.lo * self.growth ** (i - 0.5)
         return self.max  # pragma: no cover — rank always covered above
+
+    def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
+        """Fold ``other``'s samples into this histogram (in place; used
+        by the metrics registry to aggregate across tenants/classes).
+        Bucket layouts must match — these are log-bucket counts, not
+        samples, so incompatible layouts cannot be re-binned."""
+        if (self.lo, self.growth, self.n_buckets) != (
+                other.lo, other.growth, other.n_buckets):
+            raise ValueError(
+                "cannot merge histograms with different bucket layouts: "
+                f"(lo={self.lo}, growth={self.growth}, "
+                f"n_buckets={self.n_buckets}) vs (lo={other.lo}, "
+                f"growth={other.growth}, n_buckets={other.n_buckets})"
+            )
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.n += other.n
+        self.total += other.total
+        self.max = max(self.max, other.max)
+        return self
+
+    def to_dict(self) -> Dict[str, object]:
+        """JSON-friendly snapshot: layout + sparse non-zero buckets."""
+        return {
+            "lo": self.lo,
+            "growth": self.growth,
+            "n_buckets": self.n_buckets,
+            "n": self.n,
+            "total": self.total,
+            "max": self.max,
+            "counts": {i: c for i, c in enumerate(self.counts) if c},
+        }
 
     @property
     def mean(self) -> float:
@@ -110,6 +147,9 @@ class ServeTelemetry:
     by_class: Dict[str, LatencyHistogram] = dataclasses.field(
         default_factory=dict
     )
+    by_tenant: Dict[str, LatencyHistogram] = dataclasses.field(
+        default_factory=dict
+    )
 
     def observe(self, req, cls_deadline_s: float) -> None:
         """Fold one completed request's timeline into the histograms."""
@@ -118,6 +158,7 @@ class ServeTelemetry:
         self.latency.record(lat)
         self.queue_wait.record(req.t_launch - req.t_arrival)
         self.by_class.setdefault(req.slo_class, LatencyHistogram()).record(lat)
+        self.by_tenant.setdefault(req.tenant, LatencyHistogram()).record(lat)
         if lat > cls_deadline_s:
             self.slo_violations += 1
 

@@ -33,6 +33,7 @@ from typing import Callable, Dict, Optional, Tuple
 import numpy as np
 
 from repro.core.flat import NEVER_MBR, _overlaps
+from repro.obs import trace as _obs_trace
 
 from .policy import MergePolicy
 
@@ -213,6 +214,12 @@ class UpdateLog:
         return self._merge(extra_mbrs=mbrs)
 
     def _merge(self, extra_mbrs: Optional[np.ndarray]) -> np.ndarray:
+        extra = 0 if extra_mbrs is None else int(extra_mbrs.shape[0])
+        with _obs_trace.span("update.merge", extra=extra,
+                             epoch=self.base_epoch):
+            return self._merge_impl(extra_mbrs)
+
+    def _merge_impl(self, extra_mbrs: Optional[np.ndarray]) -> np.ndarray:
         if extra_mbrs is not None and extra_mbrs.shape[0]:
             b = extra_mbrs.shape[0]
             extra_gids = np.arange(self.next_gid, self.next_gid + b,

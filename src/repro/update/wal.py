@@ -37,6 +37,8 @@ from typing import List, Tuple
 
 import numpy as np
 
+from repro.obs import trace as _obs_trace
+
 MAGIC = b"MQRWAL01"
 _HEAD = struct.Struct("<II")  # payload_len, crc32
 
@@ -103,18 +105,21 @@ class WriteAheadLog:
         """Durably append one mutation record; returns its sequence
         number.  The record is on disk (fsync'd when ``sync``) before
         this returns — the caller then applies the op to live state."""
-        arr = _coerce(op, arr)
-        record = _encode(op, self.seq, arr)
-        if self.fault_plan is not None and self.fault_plan.tear_now():
-            # Simulated kill mid-write: half the record reaches the disk,
-            # the process dies.  Replay must detect and drop this tail.
-            self._f.write(record[: max(len(record) // 2, 1)])
+        with _obs_trace.span("wal.append", op=op, seq=self.seq,
+                             sync=self.sync):
+            arr = _coerce(op, arr)
+            record = _encode(op, self.seq, arr)
+            if self.fault_plan is not None and self.fault_plan.tear_now():
+                # Simulated kill mid-write: half the record reaches the
+                # disk, the process dies.  Replay must detect and drop
+                # this tail.
+                self._f.write(record[: max(len(record) // 2, 1)])
+                self._flush()
+                raise self.fault_plan.killed_mid_append()
+            self._f.write(record)
             self._flush()
-            raise self.fault_plan.killed_mid_append()
-        self._f.write(record)
-        self._flush()
-        self.seq += 1
-        return self.seq - 1
+            self.seq += 1
+            return self.seq - 1
 
     def _flush(self) -> None:
         self._f.flush()
